@@ -1,0 +1,61 @@
+"""Shared benchmark utilities: timing, tiny-BERT setup, paper constants."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+# --- Paper hardware constants (Table 1, §4.4) ---
+PAPER = dict(
+    nodes=32,
+    gpus_per_node=8,
+    network_bps=10e9 / 8,           # 10 Gb/s -> bytes/s per node
+    pcie_bps=64e9 / 8,              # PCIe "64Gb/s" -> bytes/s
+    bert_large_params=340e6,
+    grad_bytes_fp16=340e6 * 2,      # fp16 gradients on the wire
+    t4_tokens_per_s=5429.1,         # paper Table 4 (optimized, seq 128)
+    t4_tokens_per_s_raw=1953.5,     # non-optimized
+    p100_tokens_per_s=3228.8,
+    rtx2080ti_tokens_per_s=10765.8,
+    tokens_per_epoch=16752.7e6,     # paper Table 3
+    phase1_batch_per_gpu=32,        # sentences (Table 6)
+    phase1_seq=128,
+)
+
+# --- TPU v5e target constants (launch/mesh.py HW) ---
+from repro.launch.mesh import HW  # noqa: E402
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 3) -> float:
+    """Median wall seconds per call (blocks on all outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def time_train_steps(step_fn, state, batch, *, iters: int = 8,
+                     warmup: int = 2) -> float:
+    """Median seconds/step for a DONATING train step (threads the state)."""
+    for _ in range(warmup):
+        state, m = step_fn(state, batch)
+        jax.block_until_ready(m["loss"])
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        state, m = step_fn(state, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,95 @@
+"""Paper Fig 3 + Fig 6: weak-scaling model, intra-node vs inter-node, and
+the gradient-accumulation rescue (Fig 6's 165x at 256 GPUs).
+
+Analytic reproduction from the paper's own constants (Table 1):
+  * compute time per step from the measured optimized T4 throughput;
+  * ring all-reduce moves 2(n-1)/n * grad_bytes per worker;
+  * intra-node: 8 GPUs CONTEND for the PCIe host links => effective
+    per-GPU bandwidth = PCIe/active_gpus (this is why the paper measures
+    intra-node weak scaling bounded by ~38%, *worse* than inter-node);
+  * inter-node: each node's single 10 Gb/s NIC carries the node's ring
+    traffic;
+  * two-level (NCCL-style) ring for the full cluster: intra + inter stages;
+  * partial compute/communication overlap (paper Fig 2), calibrated at 0.3.
+
+The same model evaluated with TPU v5e ICI/DCN constants shows where the
+bottleneck moves on our target (ICI removes it; cross-pod DCN re-creates
+it, which is exactly what core/collectives.hierarchical_psum addresses).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import HW, PAPER, csv
+
+OVERLAP = 0.3
+COMPUTE_1 = PAPER["phase1_batch_per_gpu"] * PAPER["phase1_seq"] / \
+    PAPER["t4_tokens_per_s"]          # seconds per micro-step per GPU
+GRAD = PAPER["grad_bytes_fp16"]
+
+
+def eff_from(comm: float, compute: float) -> float:
+    exposed = max(0.0, comm - OVERLAP * compute)
+    return compute / (compute + exposed)
+
+
+def intra_node(n_gpus: int, accum: int = 1) -> float:
+    if n_gpus == 1:
+        return 1.0
+    per_gpu_bw = PAPER["pcie_bps"] / n_gpus       # host-link contention
+    comm = 2.0 * (n_gpus - 1) / n_gpus * GRAD / per_gpu_bw
+    return eff_from(comm, accum * COMPUTE_1)
+
+
+def inter_node(n_nodes: int, gpus_per_node: int = 1, accum: int = 1) -> float:
+    if n_nodes == 1 and gpus_per_node == 1:
+        return 1.0
+    # two-level ring: PCIe stage inside the node + NIC ring across nodes
+    comm_intra = 0.0
+    if gpus_per_node > 1:
+        comm_intra = 2.0 * (gpus_per_node - 1) / gpus_per_node * GRAD / \
+            (PAPER["pcie_bps"] / gpus_per_node)
+    comm_inter = 0.0
+    if n_nodes > 1:
+        comm_inter = 2.0 * (n_nodes - 1) / n_nodes * GRAD / \
+            PAPER["network_bps"]
+    return eff_from(comm_intra + comm_inter, accum * COMPUTE_1)
+
+
+def main():
+    # --- Fig 3: intra-node (PCIe, contended) vs inter-node (10 Gb/s) ---
+    for n in (1, 2, 4, 8):
+        csv(f"fig3/intra_node_{n}G", 0.0,
+            f"weak_scaling_eff={intra_node(n):.2f}")
+        csv(f"fig3/inter_node_{n}M1G", 0.0,
+            f"weak_scaling_eff={inter_node(n):.2f}")
+    csv("fig3/paper_claims", 0.0,
+        f"model_8G_intra={intra_node(8):.2f} (paper: <=0.38); "
+        f"model_2M1G={inter_node(2):.2f} (paper: 'nearly zero gain', "
+        f"~0.5-0.6)")
+
+    # --- Fig 6: full cluster 32Mx8G with/without gradient accumulation ---
+    for accum in (1, 4):
+        for nodes in (1, 4, 8, 16, 32):
+            eff = inter_node(nodes, gpus_per_node=8, accum=accum)
+            csv(f"fig6/accum{accum}_{nodes}Mx8G", 0.0,
+                f"eff={eff:.2f} speedup={eff * nodes * 8:.0f}x")
+    eff = inter_node(32, 8, accum=4)
+    csv("fig6/paper_claim", 0.0,
+        f"model_256gpu_accum4_speedup={eff * 256:.0f}x eff={eff:.2f} "
+        f"(paper: 165x, ~0.70 weak-scaling eff)")
+
+    # --- same model on the TPU v5e target ---
+    for name, bps in (("ici", HW["ici_bw"]), ("dcn_cross_pod",
+                                              HW["dcn_bw"])):
+        for accum in (1, 4):
+            comm = 2.0 * GRAD / bps
+            eff = eff_from(comm, accum * COMPUTE_1 / 36)  # v5e ~36x T4
+            csv(f"fig3_tpu/{name}_accum{accum}", 0.0, f"eff={eff:.2f}")
+    csv("fig3_tpu/note", 0.0,
+        "ICI absorbs BERT-size gradients; cross-pod DCN reintroduces the "
+        "paper's bottleneck -> hierarchical_psum + accumulation (core/)")
+
+
+if __name__ == "__main__":
+    main()

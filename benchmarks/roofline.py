@@ -1,0 +1,124 @@
+"""Roofline aggregation (deliverable g): reads experiments/dryrun/*.json and
+emits the per-(arch x shape x mesh) table used by EXPERIMENTS.md §Roofline,
+plus an analytic per-device memory model for the fits-in-HBM column (the
+XLA CPU arena over-reports TPU residency -- see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import HW, csv
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def memory_model(arch: str, shape_name: str, *, chips: int = 256,
+                 accum: int = 4, precision_bytes: int = 2,
+                 shard_grads: bool = True) -> dict:
+    """Analytic per-device bytes on the (16,16) mesh.
+
+    Params are 2-D sharded (FSDP x TP => /chips); optimizer fp32 master+m+v;
+    grads fp32 (sharded when ZeRO-2); activations: scan-carry residuals
+    (B*S*d bf16 per block) + per-layer transient; decode adds the KV cache.
+    """
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.param_count()
+    out = {}
+    out["params_compute"] = n * precision_bytes / chips
+    if shape.kind == "train":
+        out["optimizer_fp32"] = n * 12 / chips
+        out["grads_fp32"] = n * 4 / (chips if shard_grads else 16)
+        b_loc = shape.global_batch / 16           # data-parallel rows
+        micro_b = max(1, b_loc / accum)
+        carry = micro_b * shape.seq_len * cfg.d_model * 2  # bf16
+        out["activation_carries"] = carry * cfg.n_layers
+        out["layer_transient"] = 6 * carry        # flash/mlp workspace
+        v_loc = cfg.vocab_size / 16
+        out["logits"] = micro_b * shape.seq_len * v_loc * 2 * 3
+    else:
+        kv_layers = sum(1 for m, _ in cfg.layer_kinds()
+                        if m.startswith("attn"))
+        local = sum(1 for m, _ in cfg.layer_kinds() if m == "attn_local")
+        glob = kv_layers - local
+        seq = shape.seq_len
+        win = min(cfg.sliding_window or seq, seq)
+        cache = (glob * seq + local * win) * cfg.n_kv_heads * \
+            cfg.head_dim * 2 * 2 * shape.global_batch
+        out["kv_cache"] = cache / chips if shape.global_batch == 1 else \
+            cache / chips
+        # mamba/rwkv states
+        n_mamba = sum(1 for m, _ in cfg.layer_kinds() if m == "mamba")
+        n_rwkv = sum(1 for m, _ in cfg.layer_kinds() if m == "rwkv")
+        out["ssm_state"] = shape.global_batch * (
+            n_mamba * cfg.mamba_d_inner * cfg.mamba_d_state * 4 +
+            n_rwkv * cfg.d_model * cfg.rwkv_head_size * 4) / min(chips, 16)
+        out["activations"] = shape.global_batch * max(shape.seq_len if
+                                                      shape.kind == "prefill"
+                                                      else 1, 1) * \
+            cfg.d_model * 2 * 4 / 16
+    out["total"] = sum(out.values())
+    out["fits_16g"] = out["total"] < 16e9
+    return out
+
+
+def load_records(mesh: str = "16x16"):
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    return recs
+
+
+def table(mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute ms | memory ms | collective ms | "
+            "dominant | useful | model fits (analytic) |",
+            "|---|---|---|---|---|---|---|---|"]
+    for rec in load_records(mesh):
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        mm = memory_model(rec["arch"], rec["shape"])
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | "
+            f"{r['compute_s'] * 1e3:.1f} | {r['memory_s'] * 1e3:.1f} | "
+            f"{r['collective_s'] * 1e3:.1f} | "
+            f"{r['dominant'].replace('_s', '')} | "
+            f"{(r['useful_compute_ratio'] or 0):.2f} | "
+            f"{mm['total'] / 2**30:.1f} GiB "
+            f"{'OK' if mm['fits_16g'] else 'OVER'} |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load_records()
+    if not recs:
+        csv("roofline/no_records", 0.0,
+            "run `python -m repro.launch.dryrun --all` first")
+        return
+    for rec in recs:
+        if rec.get("status") != "ok":
+            csv(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+                f"status={rec.get('status')} {rec.get('reason', '')[:60]}")
+            continue
+        r = rec["roofline"]
+        extra = ""
+        kfile = DRYRUN_DIR / (f"{rec['arch']}_{rec['shape']}_"
+                              f"{rec['mesh']}_kernelized.json")
+        if kfile.exists():
+            k = json.loads(kfile.read_text())
+            if k.get("status") == "ok":
+                mk = k["roofline"]["memory_s"]
+                gain = r["memory_s"] / mk if mk else float("inf")
+                extra = f" kernelized_memory_ms={mk * 1e3:.1f} ({gain:.1f}x)"
+        csv(f"roofline/{rec['arch']}/{rec['shape']}", 0.0,
+            f"compute_ms={r['compute_s'] * 1e3:.1f} "
+            f"memory_ms={r['memory_s'] * 1e3:.1f} "
+            f"collective_ms={r['collective_s'] * 1e3:.1f} "
+            f"dominant={r['dominant']} "
+            f"useful={(r['useful_compute_ratio'] or 0):.2f}" + extra)
+
+
+if __name__ == "__main__":
+    main()

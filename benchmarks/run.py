@@ -1,0 +1,51 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark runner: one module per paper table/figure (DESIGN.md §6).
+
+  PYTHONPATH=src python -m benchmarks.run [--only table4,fig5,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from repro.utils import logger
+
+MODULES = [
+    ("table3", "benchmarks.table3_projection"),
+    ("table4", "benchmarks.table4_throughput"),
+    ("fig3_fig6", "benchmarks.fig3_weak_scaling"),
+    ("fig5", "benchmarks.fig5_grad_accum"),
+    ("table6", "benchmarks.table6_two_phase"),
+    ("table7", "benchmarks.table7_cost"),
+    ("fig8", "benchmarks.fig8_opt_equivalence"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    failures = 0
+    for name, module in MODULES:
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ({module}) ---")
+        t0 = time.time()
+        try:
+            __import__(module, fromlist=["main"]).main()
+            print(f"# {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"# {name} FAILED")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 3: single-device pretraining time projection.
+
+Reproduces the paper's own table from its measured throughputs, then adds
+the TPU v5e projection: tokens/s derived from the roofline (per-chip
+197 TFLOP/s at the measured useful-compute ratio) and 6*N*D tokens math.
+"""
+from __future__ import annotations
+
+from benchmarks.common import HW, PAPER, csv
+
+
+def days_for_epochs(tokens_per_s, epochs=40,
+                    tokens_per_epoch=PAPER["tokens_per_epoch"]):
+    return epochs * tokens_per_epoch / tokens_per_s / 86400.0
+
+
+def main():
+    for dev, tps in (("P100", PAPER["p100_tokens_per_s"]),
+                     ("T4", PAPER["t4_tokens_per_s"]),
+                     ("2080Ti", PAPER["rtx2080ti_tokens_per_s"])):
+        csv(f"table3/{dev}", 0.0,
+            f"tokens_per_s={tps:.0f} days_40_epochs={days_for_epochs(tps):.0f}"
+            f" (paper: {dict(P100=2400, T4=1440, **{'2080Ti': 720})[dev]})")
+
+    # v5e single-chip projection for BERT-large at 40% MFU
+    n = PAPER["bert_large_params"]
+    mfu = 0.4
+    tps_v5e = mfu * HW["peak_flops_bf16"] / (6.0 * n)
+    csv("table3/TPUv5e_projected", 0.0,
+        f"tokens_per_s={tps_v5e:.0f} days_40_epochs="
+        f"{days_for_epochs(tps_v5e):.1f} (at {mfu:.0%} MFU)")
+    # full 256-chip pod at 70% weak scaling (the paper's efficiency)
+    tps_pod = tps_v5e * 256 * 0.70
+    csv("table3/TPUv5e_pod256", 0.0,
+        f"tokens_per_s={tps_pod:.2e} days_40_epochs="
+        f"{days_for_epochs(tps_pod) * 24:.1f}h (70% weak scaling)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table 7/8 + §6: cost-efficiency reproduction."""
+from __future__ import annotations
+
+from benchmarks.common import csv
+
+
+def main():
+    # paper appendix numbers
+    t4_hour = 0.35
+    days = 12
+    cloud = 256 * t4_hour * 24 * days
+    csv("table7/cloud_t4_256x12d", 0.0,
+        f"usd={cloud:.0f} (paper: 25804.8)")
+    own = 32 * 19500
+    csv("table7/owned_cluster", 0.0, f"usd={own} (paper: 624K)")
+    csv("table8/dgx1_cluster", 0.0, f"usd={32 * 149000} (paper: 4.768M)")
+    csv("table8/dgx2_cluster", 0.0, f"usd={32 * 399000} (paper: 12.768M)")
+    # replacement-cycle amortisation (paper conclusion: ~90 experiments/3y)
+    n_experiments = int(3 * 365 / days)
+    csv("table7/amortised_experiments", 0.0,
+        f"experiments_per_3y={n_experiments} "
+        f"usd_per_experiment={own / n_experiments:.0f}")
+
+
+if __name__ == "__main__":
+    main()

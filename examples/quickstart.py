@@ -1,0 +1,53 @@
+"""Quickstart: train a tiny BERT with the paper's full optimization stack.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Runs in ~1 minute on CPU: synthetic corpus -> WordPiece -> masked/NSP
+examples -> per-worker shards -> AMP (bf16) + gradient accumulation +
+LAMB -> loss goes down.
+"""
+import tempfile
+
+import jax
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import InputShape, TrainConfig
+from repro.core.amp import make_policy
+from repro.data.pipeline import ShardedLoader, prepare_bert_data
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.sharding import make_rules
+from repro.train.train_step import init_train_state, make_train_step_gspmd
+from repro.train.trainer import train_loop
+
+
+def main():
+    cfg = smoke_variant(get_config("bert-large"), d_model=128)
+    workdir = tempfile.mkdtemp(prefix="repro_quickstart_")
+
+    # --- data: the paper's §3.1.1 pipeline + §4.1 sharding ---
+    tok, _ = prepare_bert_data(workdir, seq_len=64, n_docs=80,
+                               vocab_size=cfg.vocab_size, n_shards=4)
+    loader = ShardedLoader(workdir, worker=0, n_workers=1, batch=16)
+
+    # --- the paper's §4 stack: AMP + accumulation + LAMB ---
+    tcfg = TrainConfig(precision="bf16", accum_steps=2, optimizer="lamb",
+                       learning_rate=3e-3, total_steps=60, warmup_steps=5)
+    shape = InputShape("quickstart", 64, 16, "train")
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    shapes, specs = api.abstract_params(cfg)
+    step, _ = make_train_step_gspmd(cfg, tcfg, mesh, make_rules(), specs,
+                                    shapes, shape)
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, make_policy("bf16"), tcfg)
+
+    state, history = train_loop(step, state, iter(loader),
+                                total_steps=60, log_every=10,
+                                tokens_per_step=16 * 64)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"\nquickstart: loss {first:.3f} -> {last:.3f} "
+          f"({'OK' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Serve a small model with batched requests: prefill + batched decode.
+
+  PYTHONPATH=src python examples/serve.py [--arch deepseek-7b] \
+      [--batch 4] [--prompt-len 32] [--new-tokens 16]
+
+Exercises the production serving path on a reduced config: decode state
+allocation, prefill fill-in, per-step KV-cache update (ring buffers for
+sliding-window layers), and reports tokens/s.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import transformer as T
+from repro.utils import logger, tree_count
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config(args.arch))
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only archs have no decode step")
+    pol = make_policy("f32")
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    logger.info("serving %s (reduced): %.2fM params", cfg.arch_id,
+                tree_count(params) / 1e6)
+
+    b, s = args.batch, args.prompt_len
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                cfg.vocab_size)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["enc_frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.enc_seq, cfg.d_model))
+    if cfg.n_vision_tokens:
+        kw["vision_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.n_vision_tokens, cfg.d_model))
+
+    max_len = s + args.new_tokens
+    state = T.init_decode_state(
+        cfg, b, max_len, jnp.float32,
+        enc_len=cfg.enc_seq if cfg.is_encoder_decoder else 0)
+
+    t0 = time.perf_counter()
+    logits, state = T.prefill(params, prompt, cfg, pol, state=state,
+                              moe_impl="dense", **kw)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    logger.info("prefill: %d x %d tokens in %.3fs (%.0f tok/s)",
+                b, s, t_prefill, b * s / t_prefill)
+
+    step = jax.jit(lambda p, t, st: T.decode_step(p, t, st, cfg, pol,
+                                                  moe_impl="dense"))
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    # warmup/compile
+    _, _ = step(params, tok, state)
+    t0 = time.perf_counter()
+    for _ in range(args.new_tokens - 1):
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+    n = b * (args.new_tokens - 1)
+    logger.info("decode: %d tokens in %.3fs (%.0f tok/s, %.1f ms/step)",
+                n, t_decode, n / t_decode,
+                1e3 * t_decode / (args.new_tokens - 1))
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    logger.info("generated ids (first request): %s", gen[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Config registry: ``get_config(arch_id)`` + reduced smoke variants."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig, TrainConfig
+from repro.configs import (bert_large, deepseek_7b, deepseek_coder_33b,
+                           gemma2_27b, granite_moe_3b_a800m,
+                           jamba_1p5_large_398b, qwen1p5_32b, qwen2_vl_7b,
+                           qwen3_moe_30b_a3b, rwkv6_1p6b, whisper_small)
+
+ARCHS = {
+    c.arch_id: c for c in [
+        rwkv6_1p6b.CONFIG,
+        qwen3_moe_30b_a3b.CONFIG,
+        granite_moe_3b_a800m.CONFIG,
+        qwen1p5_32b.CONFIG,
+        deepseek_coder_33b.CONFIG,
+        whisper_small.CONFIG,
+        jamba_1p5_large_398b.CONFIG,
+        deepseek_7b.CONFIG,
+        gemma2_27b.CONFIG,
+        qwen2_vl_7b.CONFIG,
+        bert_large.CONFIG,
+        bert_large.BERT_BASE,
+    ]
+}
+
+ASSIGNED = [
+    "rwkv6-1.6b", "qwen3-moe-30b-a3b", "granite-moe-3b-a800m", "qwen1.5-32b",
+    "deepseek-coder-33b", "whisper-small", "jamba-1.5-large-398b",
+    "deepseek-7b", "gemma2-27b", "qwen2-vl-7b",
+]
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def get_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]
+
+
+def smoke_variant(cfg: ModelConfig, *, d_model: int = 256,
+                  n_blocks: int = 1, vocab: int = 512) -> ModelConfig:
+    """Reduced same-family variant: <=2 layers, d_model<=512, <=4 experts."""
+    d_model = min(d_model, 512)
+    pattern = cfg.block_pattern
+    n_layers = n_blocks * len(pattern)
+    if n_layers > 8:  # jamba's 8-layer pattern: keep one block
+        n_layers = len(pattern)
+    head_dim = 32
+    n_heads = max(2, d_model // 64)
+    n_kv = max(1, min(cfg.n_kv_heads, n_heads // max(1, cfg.q_per_kv)))
+    if n_heads % n_kv:
+        n_kv = 1
+    upd = dict(
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=d_model * 2,
+        vocab_size=vocab,
+        sliding_window=min(cfg.sliding_window, 16) if cfg.sliding_window else 0,
+    )
+    if cfg.n_experts:
+        upd.update(n_experts=4, top_k=2, moe_d_ff=d_model * 2)
+    if cfg.mrope_sections:
+        # sections sum to head_dim // 2
+        upd.update(mrope_sections=(head_dim // 2 - 8, 4, 4))
+    if cfg.is_encoder_decoder:
+        upd.update(n_enc_layers=2, enc_seq=16, max_position=4096)
+    if cfg.max_position and not cfg.is_encoder_decoder:
+        upd.update(max_position=512)
+    if cfg.n_vision_tokens:
+        upd.update(n_vision_tokens=8)
+    return dataclasses.replace(cfg, **upd)

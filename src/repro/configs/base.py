@@ -1,0 +1,239 @@
+"""Model / run configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the repeating
+layer structure is a ``block_pattern`` -- a tuple of (mixer, mlp) kind pairs
+that tiles ``n_layers`` (scan-over-blocks lowers one block body regardless of
+depth).  Mixer kinds: attn | attn_local | attn_global | attn_bidir | mamba |
+rwkv.  MLP kinds: dense | moe | rwkv_cm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+MIXERS = ("attn", "attn_local", "attn_global", "attn_bidir", "mamba", "rwkv")
+MLPS = ("dense", "moe", "rwkv_cm")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm | encoder
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+
+    block_pattern: Tuple[Tuple[str, str], ...] = (("attn", "dense"),)
+
+    # --- MLP ---
+    mlp_kind: str = "swiglu"         # swiglu | gelu | geglu  (dense layers)
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    router_aux_coef: float = 0.01
+    capacity_factor: float = 1.25
+
+    # --- attention ---
+    pos_kind: str = "rope"           # rope | mrope | learned | none
+    rope_theta: float = 10000.0
+    mrope_sections: Tuple[int, ...] = ()
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0
+    final_logit_softcap: float = 0.0
+    sliding_window: int = 0          # for attn_local mixers
+
+    # --- norms ---
+    norm_kind: str = "rmsnorm"       # rmsnorm | layernorm
+    post_block_norm: bool = False    # gemma2-style pre+post norms
+    norm_eps: float = 1e-6
+
+    # --- mamba (jamba) ---
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+    mamba_dt_rank: int = 0           # 0 -> d_model // 16
+
+    # --- rwkv6 ---
+    rwkv_head_size: int = 64
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # stub frontend: #frame embeddings
+    enc_block_pattern: Tuple[Tuple[str, str], ...] = (("attn_bidir", "dense"),)
+
+    # --- encoder-only (BERT) ---
+    is_encoder_only: bool = False
+
+    # --- vlm stub frontend ---
+    n_vision_tokens: int = 0
+
+    # --- embeddings ---
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False   # gemma: embed * sqrt(d_model)
+    max_position: int = 0            # learned positions table size
+
+    # --- citations ---
+    source: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "head_dim",
+                           self.head_dim or self.d_model // self.n_heads)
+        assert self.n_layers % len(self.block_pattern) == 0, (
+            self.arch_id, self.n_layers, len(self.block_pattern))
+        for mixer, mlp in self.block_pattern:
+            assert mixer in MIXERS and mlp in MLPS, (mixer, mlp)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def q_per_kv(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return self.mamba_dt_rank or max(1, self.d_model // 16)
+
+    @property
+    def rwkv_n_heads(self) -> int:
+        return self.d_model // self.rwkv_head_size
+
+    @property
+    def has_moe(self) -> bool:
+        return any(mlp == "moe" for _, mlp in self.block_pattern)
+
+    @property
+    def has_attention(self) -> bool:
+        kinds = {m for m, _ in self.block_pattern} | {m for m, _ in self.enc_block_pattern}
+        return any(k.startswith("attn") for k in kinds)
+
+    @property
+    def subquadratic(self) -> bool:
+        """True if decode state size is bounded or sub-linear-quadratic:
+        pure SSM, or hybrid/sliding-window where full-attn layers are a small
+        fraction / seq-shardable (see DESIGN.md §4)."""
+        mixers = {m for m, _ in self.block_pattern}
+        if not self.has_attention:
+            return True
+        if "mamba" in mixers or "rwkv" in mixers:
+            return True  # hybrid: few attention layers, cache seq-sharded
+        if "attn_local" in mixers and self.sliding_window:
+            return True  # gemma2-style: half the layers have bounded cache
+        return False
+
+    def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
+        """Full per-layer (mixer, mlp) list of length n_layers."""
+        return tuple(self.block_pattern) * self.n_blocks
+
+    def param_count(self, active_only: bool = False) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # token embedding
+        if self.max_position:
+            total += self.max_position * d
+        if not self.tie_embeddings and not self.is_encoder_only:
+            total += d * v
+        total += d  # final norm
+
+        def attn_params():
+            p = d * self.n_heads * self.head_dim       # wq
+            p += 2 * d * self.n_kv_heads * self.head_dim  # wk, wv
+            p += self.n_heads * self.head_dim * d      # wo
+            if self.qkv_bias:
+                p += (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+            return p
+
+        def dense_mlp():
+            if self.mlp_kind in ("swiglu", "geglu"):
+                return 3 * d * self.d_ff
+            return 2 * d * self.d_ff  # gelu
+
+        def moe_mlp(active):
+            e = self.top_k if active else self.n_experts
+            return e * 3 * d * self.moe_d_ff + d * self.n_experts  # + router
+
+        def mamba_params():
+            din, n, r = self.mamba_d_inner, self.mamba_d_state, self.dt_rank
+            return (d * 2 * din + self.mamba_d_conv * din + din
+                    + din * (r + 2 * n) + r * din + 2 * din + din * d)
+
+        def rwkv_params():
+            # 4 square projections + output + decay/mix loras + channel mix
+            return 5 * d * d + d * (5 * 32) + 5 * 32 * d + d * 64 + 64 * d \
+                + 2 * d * self.d_ff + d * d + 10 * d
+
+        for mixer, mlp in self.layer_kinds():
+            total += 2 * d  # pre-norms
+            if mixer.startswith("attn"):
+                total += attn_params()
+            elif mixer == "mamba":
+                total += mamba_params()
+            elif mixer == "rwkv":
+                total += rwkv_params()
+            if mlp == "dense":
+                total += dense_mlp()
+            elif mlp == "moe":
+                total += moe_mlp(active_only)
+        if self.is_encoder_decoder:
+            for mixer, mlp in tuple(self.enc_block_pattern) * (
+                    self.n_enc_layers // len(self.enc_block_pattern)):
+                total += 2 * d + attn_params() + dense_mlp()
+            # cross attention in every decoder layer
+            total += self.n_layers * attn_params()
+        return total
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Paper-derived training knobs (phases, AMP, accumulation, collectives)."""
+    precision: str = "bf16"            # f32 | bf16 | f16 (paper: fp16+scaling)
+    accum_steps: int = 4               # paper §5.2 uses 4
+    collective_strategy: str = "psum"  # psum | ring | hierarchical | bucketed
+    bucket_bytes: int = 25 * 2 ** 20
+    optimizer: str = "lamb"            # lamb | adamw
+    learning_rate: float = 1e-4        # paper Table 6
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    remat: bool = True
+    fsdp: bool = True
+    # ZeRO-2-style gradient sharding: constrain grads to the param sharding
+    # so XLA reduce-scatters instead of all-reducing full-size gradients.
+    # False = paper-faithful DDP semantics (every worker holds full grads).
+    shard_grads: bool = False
+    # ZeRO-1 pure data parallelism (the paper's regime, for <=3B models):
+    # batch over EVERY mesh axis, optimizer state sharded, compute params
+    # gathered (replicated) once per step -- no per-layer TP collectives.
+    pure_dp: bool = False
+    moe_impl: str = "a2a"              # a2a | replicated (see models/moe.py)
+    seed: int = 0

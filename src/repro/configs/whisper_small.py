@@ -1,0 +1,31 @@
+"""Whisper-small -- encoder-decoder audio transformer (conv frontend STUB).
+
+[arXiv:2212.04356] 12L enc + 12L dec, d_model=768 12H (kv=12) d_ff=3072
+vocab=51865.  Per the assignment carve-out, the mel-spectrogram + conv
+feature extractor is a stub: ``input_specs()`` provides precomputed frame
+embeddings of shape (B, 1500, d_model).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-small",
+    family="audio",
+    n_layers=12,            # decoder layers
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab_size=51865,
+    head_dim=64,
+    block_pattern=(("attn", "dense"),),       # decoder self-attn (+cross, see models)
+    enc_block_pattern=(("attn_bidir", "dense"),),
+    mlp_kind="gelu",
+    pos_kind="learned",
+    norm_kind="layernorm",
+    is_encoder_decoder=True,
+    n_enc_layers=12,
+    enc_seq=1500,           # 30 s of audio at 50 frames/s (post-conv stub)
+    max_position=65536,     # decoder learned positions (sized for dry-run shapes)
+    tie_embeddings=True,
+    source="Whisper-small enc-dec [arXiv:2212.04356]",
+)

@@ -1,0 +1,143 @@
+"""Automated mixed precision (paper §4.2), adapted to TPU.
+
+The paper uses APEX AMP: FP16 compute + FP32 master weights + loss scaling,
+with a per-op numerical-safety categorisation handled by graph rewriting.
+In JAX we express the same policy explicitly:
+
+  * ``Policy`` declares the dtype discipline:
+      - param_dtype   : storage dtype of the *compute* copy of the weights
+      - compute_dtype : dtype for matmuls / elementwise chains
+      - reduce_dtype  : dtype for numerically-unsafe ops (softmax, norms,
+                        losses, recurrent scans) -- the paper's "unsafe op"
+                        category, applied statically instead of via rewrite.
+  * FP32 master weights live in the optimizer state (see optim/): the forward
+    pass receives a ``cast_params`` copy.
+  * ``DynamicLossScale`` implements APEX "dynamic" scaling: multiply the loss
+    by ``scale``; if any gradient is non-finite, skip the update and halve the
+    scale, otherwise grow by 2x every ``growth_interval`` good steps.
+
+On TPU the default policy is bf16 (same exponent range as fp32 => scale
+fixed at 1 and never adjusted) but fp16 is fully supported for paper fidelity
+and for KV-cache / activation storage.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import all_finite, tree_cast
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    param_dtype: Any = jnp.bfloat16    # compute-copy storage
+    compute_dtype: Any = jnp.bfloat16  # matmul inputs
+    reduce_dtype: Any = jnp.float32    # softmax / norm / loss / scans
+    output_dtype: Any = jnp.float32    # loss & logits-for-loss dtype
+
+    def cast_params(self, params):
+        return tree_cast(params, self.param_dtype)
+
+    def cast_compute(self, x):
+        return jax.tree_util.tree_map(
+            lambda a: a.astype(self.compute_dtype)
+            if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating) else a,
+            x,
+        )
+
+    def to_reduce(self, x):
+        return x.astype(self.reduce_dtype)
+
+    @property
+    def needs_loss_scaling(self) -> bool:
+        return self.compute_dtype == jnp.float16
+
+
+def make_policy(name: str) -> Policy:
+    """'f32' | 'bf16' | 'f16' (paper-faithful fp16 + loss scaling)."""
+    if name in ("f32", "fp32", "float32"):
+        return Policy(jnp.float32, jnp.float32, jnp.float32, jnp.float32)
+    if name in ("bf16", "bfloat16"):
+        return Policy(jnp.bfloat16, jnp.bfloat16, jnp.float32, jnp.float32)
+    if name in ("f16", "fp16", "float16"):
+        return Policy(jnp.float16, jnp.float16, jnp.float32, jnp.float32)
+    raise ValueError(f"unknown precision policy {name!r}")
+
+
+class LossScaleState(NamedTuple):
+    scale: jax.Array          # f32 scalar, current loss scale
+    good_steps: jax.Array     # i32 scalar, consecutive finite steps
+    total_skipped: jax.Array  # i32 scalar, number of skipped updates
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicLossScale:
+    """APEX-style dynamic loss scaling (paper §2.3 / §4.2)."""
+    initial_scale: float = 2.0 ** 15
+    growth_interval: int = 2000
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+    def init(self) -> LossScaleState:
+        return LossScaleState(
+            scale=jnp.float32(self.initial_scale),
+            good_steps=jnp.int32(0),
+            total_skipped=jnp.int32(0),
+        )
+
+    def scale_loss(self, loss: jax.Array, state: LossScaleState) -> jax.Array:
+        return loss * state.scale.astype(loss.dtype)
+
+    def unscale_grads(self, grads, state: LossScaleState):
+        inv = (1.0 / state.scale).astype(jnp.float32)
+        return jax.tree_util.tree_map(
+            lambda g: (g.astype(jnp.float32) * inv), grads)
+
+    def update(self, state: LossScaleState, grads_finite: jax.Array
+               ) -> Tuple[LossScaleState, jax.Array]:
+        """Returns (new_state, should_apply_update)."""
+        grew = state.good_steps + 1 >= self.growth_interval
+        new_scale = jnp.where(
+            grads_finite,
+            jnp.where(grew,
+                      jnp.minimum(state.scale * self.growth_factor,
+                                  self.max_scale),
+                      state.scale),
+            jnp.maximum(state.scale * self.backoff_factor, self.min_scale),
+        )
+        new_good = jnp.where(grads_finite,
+                             jnp.where(grew, 0, state.good_steps + 1),
+                             0).astype(jnp.int32)
+        new_skip = state.total_skipped + jnp.where(grads_finite, 0, 1).astype(jnp.int32)
+        return LossScaleState(new_scale, new_good, new_skip), grads_finite
+
+
+class NoOpLossScale:
+    """Loss scale for bf16/f32 policies: scale==1, updates never skipped."""
+
+    def init(self) -> LossScaleState:
+        return LossScaleState(jnp.float32(1.0), jnp.int32(0), jnp.int32(0))
+
+    def scale_loss(self, loss, state):
+        return loss
+
+    def unscale_grads(self, grads, state):
+        return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+
+    def update(self, state, grads_finite):
+        return state, jnp.asarray(True)
+
+
+def make_loss_scale(policy: Policy, **kw):
+    if policy.needs_loss_scaling:
+        return DynamicLossScale(**kw)
+    return NoOpLossScale()
+
+
+def grads_finite(grads) -> jax.Array:
+    return all_finite(grads)

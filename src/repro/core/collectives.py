@@ -1,0 +1,182 @@
+"""Gradient-exchange collectives (paper §3.2, §4.4).
+
+Three strategies, selectable per training config:
+
+  * ``psum``            -- XLA's native all-reduce (what NCCL's auto-detected
+                           ring is to PyTorch; the production default).
+  * ``ring``            -- a faithful reimplementation of NCCL's ring
+                           all-reduce [31] out of ``lax.ppermute``:
+                           N-1 reduce-scatter hops + N-1 all-gather hops.
+                           Validated equal to ``psum``; its collective-permute
+                           ops are visible in the dry-run HLO, making the
+                           paper's mechanism inspectable on TPU.
+  * ``hierarchical``    -- the paper's slow-link optimisation (PCIe vs
+                           10Gb/s Ethernet) mapped to ICI vs DCN:
+                           reduce-scatter inside the pod, all-reduce the
+                           1/N shard across pods, all-gather inside the pod.
+
+Plus ``bucketed_psum``: the paper's comm/compute *overlap* (§4.4, Fig 2).
+PyTorch DDP overlaps by all-reducing gradient buckets as backward produces
+them; under XLA the analogous lever is issuing one collective per bucket
+(instead of one giant fused all-reduce) so the latency-hiding scheduler can
+pipeline collectives with the remaining backward compute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Ring all-reduce from ppermute (NCCL's algorithm, paper ref [31]).
+# ---------------------------------------------------------------------------
+
+def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
+    """All-reduce over ``axis_name`` as a reduce-scatter + all-gather ring.
+
+    Must be called inside shard_map/pmap with ``axis_name`` bound.
+    The array's leading dim is chunked N ways (padded if needed).
+    """
+    n = jax.lax.axis_size(axis_name)
+    if n == 1:
+        return x
+    idx = jax.lax.axis_index(axis_name)
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % n
+    flat = jnp.pad(flat, (0, pad))
+    chunks = flat.reshape(n, -1)  # chunk c lives on everyone; ring reduces it
+
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # Reduce-scatter phase.  At hop k device d sends its running partial sum
+    # (initially its own copy of chunk d) and accumulates the received
+    # partial into chunk (d-k-1) mod n.  After n-1 hops device d holds the
+    # FULL sum of chunk (d+1) mod n.
+    def rs_step(k, send):
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        return jnp.take(chunks, jnp.mod(idx - k - 1, n), axis=0) + recv
+
+    owned = jax.lax.fori_loop(0, n - 1, rs_step, jnp.take(chunks, idx, axis=0))
+
+    # All-gather phase: circulate the owned (fully-reduced) chunk.  At hop k
+    # device d receives the full sum of chunk (d-k) mod n.
+    out_chunks = jnp.zeros_like(chunks)
+    out_chunks = jax.lax.dynamic_update_index_in_dim(
+        out_chunks, owned, jnp.mod(idx + 1, n), 0)
+
+    def ag_step(k, carry):
+        acc, send = carry
+        recv = jax.lax.ppermute(send, axis_name, perm)
+        acc = jax.lax.dynamic_update_index_in_dim(
+            acc, recv, jnp.mod(idx - k, n), 0)
+        return acc, recv
+
+    out_chunks, _ = jax.lax.fori_loop(0, n - 1, ag_step, (out_chunks, owned))
+
+    out = out_chunks.reshape(-1)
+    if pad:
+        out = out[: out.size - pad]
+    return out.reshape(orig_shape)
+
+
+def ring_all_reduce_tree(tree: Any, axis_name: str) -> Any:
+    return jax.tree_util.tree_map(lambda x: ring_all_reduce(x, axis_name), tree)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical all-reduce (paper's PCIe-vs-network schedule -> ICI vs DCN).
+# ---------------------------------------------------------------------------
+
+def hierarchical_psum(x: jax.Array, fast_axis, slow_axis) -> jax.Array:
+    """reduce-scatter(fast) -> psum(slow) -> all-gather(fast).
+
+    The slow (cross-pod DCN) link carries only 1/len(fast_axis) of the
+    gradient bytes -- the paper's core multi-node insight.  Falls back to a
+    plain two-axis psum when the tensor cannot be evenly scattered.
+    """
+    fast = (fast_axis,) if isinstance(fast_axis, str) else tuple(fast_axis)
+    nf = 1
+    for a in fast:
+        nf *= jax.lax.axis_size(a)
+    flat = x.reshape(-1)
+    if flat.size % nf != 0:
+        return jax.lax.psum(jax.lax.psum(x, fast), slow_axis)
+    shard = jax.lax.psum_scatter(
+        flat.reshape(nf, -1), fast, scatter_dimension=0, tiled=False)
+    shard = jax.lax.psum(shard, slow_axis)
+    out = jax.lax.all_gather(shard, fast, axis=0, tiled=False)
+    return out.reshape(nf, -1).reshape(x.shape)
+
+
+def hierarchical_psum_tree(tree: Any, fast_axis, slow_axis) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: hierarchical_psum(x, fast_axis, slow_axis), tree)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed all-reduce for comm/compute overlap (paper §4.4 Fig 2).
+# ---------------------------------------------------------------------------
+
+def bucket_leaves(tree: Any, bucket_bytes: int = 25 * 2 ** 20) -> list:
+    """Group pytree leaves into buckets of ~bucket_bytes (DDP-style)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    buckets, cur, cur_bytes = [], [], 0
+    for i, leaf in enumerate(leaves):
+        nbytes = leaf.size * leaf.dtype.itemsize if hasattr(leaf, "dtype") else 0
+        if cur and cur_bytes + nbytes > bucket_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def bucketed_psum_tree(tree: Any, axis_names, *,
+                       bucket_bytes: int = 25 * 2 ** 20) -> Any:
+    """One psum per ~25MB bucket instead of one fused all-reduce.
+
+    Leaves XLA's latency-hiding scheduler free to overlap early buckets'
+    collectives with later buckets' (still-running) backward compute --
+    the paper's Fig 2 timeline, compiler-scheduled.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out = list(leaves)
+    for bucket in bucket_leaves(tree, bucket_bytes):
+        reduced = jax.lax.psum(tuple(leaves[i] for i in bucket), axis_names)
+        for j, i in enumerate(bucket):
+            out[i] = reduced[j]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Strategy dispatch used by the train step.
+# ---------------------------------------------------------------------------
+
+def reduce_gradients(grads: Any, *, strategy: str, data_axes: Sequence[str],
+                     pod_axis: Optional[str] = None,
+                     bucket_bytes: int = 25 * 2 ** 20) -> Any:
+    """All-reduce ``grads`` over the data-parallel axes inside shard_map."""
+    data_axes = tuple(data_axes)
+    if strategy == "psum":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g, data_axes + ((pod_axis,) if pod_axis else ())),
+            grads)
+    if strategy == "bucketed":
+        axes = data_axes + ((pod_axis,) if pod_axis else ())
+        return bucketed_psum_tree(grads, axes, bucket_bytes=bucket_bytes)
+    if strategy == "ring":
+        axes = data_axes + ((pod_axis,) if pod_axis else ())
+        name = axes[0] if len(axes) == 1 else axes
+        return ring_all_reduce_tree(grads, name)
+    if strategy == "hierarchical":
+        assert pod_axis is not None, "hierarchical needs a pod axis"
+        return hierarchical_psum_tree(grads, data_axes, pod_axis)
+    raise ValueError(f"unknown collective strategy {strategy!r}")

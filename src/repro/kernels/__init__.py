@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the compute hot-spots the paper optimizes (§4.3):
+#   bias_gelu.py        -- the paper's own 7-kernels->1 GELU fusion example
+#   layernorm.py        -- fused LayerNorm (one HBM pass)
+#   flash_attention.py  -- attention without materialised S^2 scores
+#   lamb_update.py      -- fused LAMB moment update (APEX fused-LAMB analogue)
+# ops.py = jit'd wrappers with impl dispatch; ref.py = pure-jnp oracles.
+from repro.kernels import ops  # noqa: F401

@@ -1,0 +1,60 @@
+"""Fused LAMB moment-update Pallas kernel (paper §4.3: APEX fused LAMB).
+
+Unfused, the moment update chain (m, v, bias correction, rsqrt, weight
+decay) is ~7 elementwise HBM passes over 4 tensors; fused it is one read of
+(w, g, m, v) and one write of (m', v', update) per tile.  The layer-wise
+trust-ratio norms are cross-tile reductions and stay in XLA (ops.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lamb_kernel(w_ref, g_ref, m_ref, v_ref, corr_ref,
+                 m_out, v_out, upd_out, *, b1, b2, eps, wd):
+    w = w_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    m = m_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    c1 = corr_ref[0]      # 1/(1-b1^t)
+    c2 = corr_ref[1]      # 1/(1-b2^t)
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * g * g
+    mhat = m2 * c1
+    vhat = v2 * c2
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * w
+    m_out[...] = m2
+    v_out[...] = v2
+    upd_out[...] = upd
+
+
+def lamb_moments(w, g, m, v, *, step, b1=0.9, b2=0.999, eps=1e-6, wd=0.01,
+                 block: int = 65536, interpret: bool = False):
+    """Flattened fused moment update.  Returns (m2, v2, update) fp32."""
+    n = w.size
+    shape = w.shape
+    corr = jnp.stack([1.0 / (1.0 - b1 ** step.astype(jnp.float32)),
+                      1.0 / (1.0 - b2 ** step.astype(jnp.float32))])
+    flat = [t.reshape(-1).astype(jnp.float32) for t in (w, g, m, v)]
+    block = min(block, n)
+    pad = (-n) % block
+    if pad:
+        flat = [jnp.pad(t, (0, pad)) for t in flat]
+    nb = flat[0].size // block
+
+    m2, v2, upd = pl.pallas_call(
+        partial(_lamb_kernel, b1=b1, b2=b2, eps=eps, wd=wd),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 4 +
+                 [pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((block,), lambda i: (i,))] * 3,
+        out_shape=[jax.ShapeDtypeStruct(flat[0].shape, jnp.float32)] * 3,
+        interpret=interpret,
+    )(*flat, corr)
+    if pad:
+        m2, v2, upd = m2[:n], v2[:n], upd[:n]
+    return m2.reshape(shape), v2.reshape(shape), upd.reshape(shape)

@@ -1,0 +1,119 @@
+"""jit'd kernel wrappers with implementation dispatch.
+
+impl = "pallas"            : compiled Mosaic kernel (TPU target)
+       "pallas_interpret"  : kernel body executed in Python on CPU
+                             (correctness validation in this container)
+       "jnp"               : pure-jnp reference (ref.py / models.layers)
+
+Default: pallas on TPU backends, jnp elsewhere (so the same model code runs
+everywhere; tests pin pallas_interpret to validate the kernels).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bias_gelu as _bg
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lamb_update as _lu
+from repro.kernels import layernorm as _ln
+from repro.kernels import ref
+
+
+def default_impl() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def bias_gelu(x, b, *, impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.bias_gelu_ref(x, b)
+    return _bg.bias_gelu(x, b, interpret=(impl == "pallas_interpret"))
+
+
+def layernorm(x, scale, bias, *, eps: float = 1e-6,
+              impl: Optional[str] = None):
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.layernorm_ref(x, scale, bias, eps)
+    return _ln.layernorm(x, scale, bias, eps=eps,
+                         interpret=(impl == "pallas_interpret"))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, impl: Optional[str] = None,
+                    block_q: int = 256, block_k: int = 256):
+    """q: (B, H, S, Dh); k,v: (B, KV, S, Dh) -- GQA expanded here.
+
+    Differentiable: the Pallas path pairs the forward kernel with the
+    FlashAttention-2 backward kernels via custom_vjp.
+    """
+    impl = impl or default_impl()
+    h, kv = q.shape[1], k.shape[1]
+    if kv != h:
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if impl == "jnp":
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    fn = _flash_vjp(bool(causal), int(window), float(softcap),
+                    int(block_q), int(block_k), impl == "pallas_interpret")
+    return fn(q, k, v)
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=None)
+def _flash_vjp(causal, window, softcap, block_q, block_k, interpret):
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              block_q=block_q, block_k=block_k, interpret=interpret)
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        return _fa.flash_attention(q, k, v, **kw)
+
+    def fwd(q, k, v):
+        out, lse = _fa.flash_attention(q, k, v, return_lse=True, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        return _fa.flash_attention_bwd(q, k, v, out, lse, dout, **kw)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+def wkv6(r, k, v, logw, u, s0, *, chunk: int = 64,
+         impl: Optional[str] = None):
+    """RWKV-6 recurrence.  jnp impl = models.rwkv.wkv6_chunked (same math,
+    XLA-fused); pallas impl = VMEM-resident chunk kernel."""
+    impl = impl or default_impl()
+    if impl == "jnp":
+        from repro.models.rwkv import wkv6_chunked
+        return wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+    from repro.kernels import wkv6 as _wkv
+    return _wkv.wkv6(r, k, v, logw, u, s0, chunk=chunk,
+                     interpret=(impl == "pallas_interpret"))
+
+
+def lamb_leaf_update(w, g, m, v, *, lr, b1, b2, eps, wd, step,
+                     impl: Optional[str] = None):
+    """Full LAMB leaf update using the fused moment kernel + XLA norms."""
+    impl = impl or default_impl()
+    if impl == "jnp":
+        m2, v2, upd = ref.lamb_moments_ref(w, g, m, v, b1=b1, b2=b2,
+                                           eps=eps, wd=wd, step=step)
+    else:
+        m2, v2, upd = _lu.lamb_moments(
+            w, g, m, v, step=step, b1=b1, b2=b2, eps=eps, wd=wd,
+            interpret=(impl == "pallas_interpret"))
+    wnorm = jnp.linalg.norm(w.reshape(-1).astype(jnp.float32))
+    unorm = jnp.linalg.norm(upd.reshape(-1))
+    trust = jnp.where(wnorm > 0, jnp.where(unorm > 0, wnorm / unorm, 1.0),
+                      1.0)
+    return w - lr * trust * upd, m2, v2

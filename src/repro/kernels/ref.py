@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def bias_gelu_ref(x: jax.Array, b: jax.Array) -> jax.Array:
+    """The paper's §4.3 example: GELU(x+b) = a*y*(1+tanh(b*(y+c*y^3)))."""
+    y = (x + b).astype(jnp.float32)
+    out = 0.5 * y * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (y + 0.044715 * jnp.power(y, 3))))
+    return out.astype(x.dtype)
+
+
+def layernorm_ref(x: jax.Array, scale: jax.Array, bias: jax.Array,
+                  eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(-1, keepdims=True)
+    var = xf.var(-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: (B, H, S, Dh) -- same-head-count attention (GQA is expanded
+    by the ops.py wrapper before the kernel)."""
+    b, h, s, dh = q.shape
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / math.sqrt(dh)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def lamb_moments_ref(w, g, m, v, *, b1=0.9, b2=0.999, eps=1e-6, wd=0.01,
+                     step=1):
+    """Fused LAMB moment update + unnormalised update direction."""
+    w, g, m, v = (t.astype(jnp.float32) for t in (w, g, m, v))
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * jnp.square(g)
+    mhat = m2 / (1 - b1 ** step)
+    vhat = v2 / (1 - b2 ** step)
+    update = mhat / (jnp.sqrt(vhat) + eps) + wd * w
+    return m2, v2, update

@@ -1,0 +1,118 @@
+"""WKV6 chunk-parallel Pallas kernel (RWKV-6 time-mix recurrence).
+
+TPU adaptation of the CUDA WKV kernel (DESIGN.md §2): grid = (B*H, n_chunks)
+with the chunk dimension sequential; the (hs x hs) recurrent state lives in
+VMEM scratch across chunks.  Per chunk of length L the kernel computes the
+decay-weighted intra-chunk attention, the cross-chunk state contribution and
+the state update -- all exponents are ordered cumulative-decay differences
+(<= 0), so the math is fp32-safe without loss-scaling tricks (see
+models/rwkv.py for the derivation; identical formulation, VMEM-resident).
+
+VMEM working set per program: 4 x (L, hs) inputs + (L, L, hs) decay tensor
++ (hs, hs) state ~= 1.3 MB at L = hs = 64 -- comfortably within v5e VMEM.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scratch(shape, dtype):
+        return pltpu.VMEM(shape, dtype)
+except ImportError:  # pragma: no cover
+    def _scratch(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sf_ref,
+                 s_scr, *, chunk: int, n_chunks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = s0_ref[0].astype(jnp.float32)
+
+    r = r_ref[0].astype(jnp.float32)     # (L, hs)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)     # log-decay, <= 0
+    u = u_ref[0].astype(jnp.float32)     # (hs,)
+    s = s_scr[...]
+
+    c = jnp.cumsum(w, axis=0)            # (L, hs)
+    c_prev = c - w
+    # intra-chunk: A[i,j] = sum_c r_i[c] k_j[c] e^{c_{i-1}[c]-c_j[c]}, j<i
+    diff = c_prev[:, None, :] - c[None, :, :]          # (L, L, hs)
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = lj < li
+    e = jnp.where(tri[:, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.sum(r[:, None, :] * e * k[None, :, :], axis=-1)  # (L, L)
+    o = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # current-token bonus
+    bonus = jnp.sum(r * u[None, :] * k, axis=-1)
+    o = o + bonus[:, None] * v
+    # cross-chunk
+    o = o + jax.lax.dot_general(r * jnp.exp(c_prev), s,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # state update
+    c_last = c[-1:, :]                                  # (1, hs)
+    k_eff = k * jnp.exp(c_last - c)
+    s_new = jnp.exp(c_last[0])[:, None] * s + jax.lax.dot_general(
+        k_eff, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_scr[...] = s_new
+    o_ref[0] = o.astype(o_ref.dtype)
+
+    @pl.when(j == n_chunks - 1)
+    def _finish():
+        sf_ref[0] = s_new.astype(sf_ref.dtype)
+
+
+def wkv6(r, k, v, logw, u, s0, *, chunk: int = 64,
+         interpret: bool = False):
+    """r,k,v,logw: (B, S, H, hs); u: (H, hs); s0: (B, H, hs, hs).
+
+    Returns (o (B, S, H, hs) fp32, s_final (B, H, hs, hs) fp32).
+    """
+    b, s, h, hs = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def to_bh(x):  # (B,S,H,hs) -> (B*H, S, hs)
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, hs)
+
+    rf, kf, vf, wf = map(to_bh, (r, k, v, logw))
+    uf = jnp.broadcast_to(u[None], (b, h, hs)).reshape(b * h, hs)
+    s0f = s0.reshape(b * h, hs, hs)
+
+    seq_spec = pl.BlockSpec((1, chunk, hs), lambda bh, j: (bh, j, 0))
+    o, sf = pl.pallas_call(
+        partial(_wkv6_kernel, chunk=chunk, n_chunks=nc),
+        grid=(b * h, nc),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, hs), lambda bh, j: (bh, 0)),
+            pl.BlockSpec((1, hs, hs), lambda bh, j: (bh, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, hs, hs), lambda bh, j: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b * h, s, hs), jnp.float32),
+            jax.ShapeDtypeStruct((b * h, hs, hs), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((hs, hs), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+    o = o.reshape(b, h, s, hs).transpose(0, 2, 1, 3)
+    return o, sf.reshape(b, h, hs, hs)

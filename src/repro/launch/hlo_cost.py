@@ -1,0 +1,527 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so a
+scan-over-blocks model (one lowered block body for N layers) under-reports
+FLOPs/bytes/collective-bytes by ~N x.  This module re-derives the three
+roofline inputs from ``compiled.as_text()`` with loop multipliers:
+
+  * computations are parsed into op lists; operand shapes are resolved
+    through a per-computation symbol table (optimized HLO operands are bare
+    ``%names``);
+  * the entry computation is walked recursively: ``fusion``/``call`` descend,
+    ``while`` descends into its body multiplied by the trip count parsed
+    from the condition computation's induction-variable compare constant
+    (the form every lax.scan lowers to);
+  * FLOPs: dot = 2 * prod(result) * prod(lhs contracting dims); arithmetic /
+    transcendental / reduce ops count prod(result) (inside fusions too);
+  * bytes: fusion-boundary traffic -- operands read + result written for
+    every top-level op of an executed computation (matches XLA's own
+    "bytes accessed" model, plus trip counts);
+  * collective bytes: result bytes per collective kind, with trip counts.
+
+Shapes in optimized HLO are post-SPMD (per-device), so all outputs are
+per-device quantities.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_ARITH = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "remainder",
+    "power", "atan2", "clamp",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "logistic",
+                   "sine", "cosine", "tan", "erf", "exponential-minus-one",
+                   "log-plus-one", "cbrt"}
+_REDUCE = {"reduce", "reduce-window"}
+_MOVEMENT = {"copy", "transpose", "concatenate", "slice", "dynamic-slice",
+             "dynamic-update-slice", "pad", "reverse", "sort",
+             "gather", "scatter", "broadcast", "reduce-precision",
+             "select-and-scatter", "rng", "rng-bit-generator", "iota"}
+# "convert" is treated as FREE: the CPU backend materialises f32 copies of
+# bf16 dot operands (TPU MXUs consume bf16 natively and fuse converts), so
+# counting convert traffic would charge the roofline for a host-only artifact.
+_FREE = {"reshape", "bitcast", "bitcast-convert", "tuple", "convert",
+         "get-tuple-element", "parameter", "constant", "after-all",
+         "partition-id", "replica-id", "copy-start", "copy-done",
+         "opt-barrier", "custom-call", "domain", "infeed", "outfeed"}
+_TRANSPARENT = {"convert", "bitcast", "reshape", "copy", "bitcast-convert"}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"([\w\-]+)\((.*)$")
+
+
+def _parse_op_line(s: str):
+    """'%n = TYPE kind(operands), attrs' -> (name, rtype, kind, rest) or
+    None.  TYPE may be a tuple containing `/*index=k*/` comments, so the
+    result type is taken with balanced-paren scanning, not regex."""
+    m = _NAME_RE.match(s)
+    if not m:
+        return None
+    name, rest = m.groups()
+    if rest.startswith("("):
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        if end < 0:
+            return None
+        rtype, tail = rest[:end], rest[end:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype, tail = rest[:sp], rest[sp + 1:].lstrip()
+    m2 = _KIND_RE.match(tail)
+    if not m2:
+        return None
+    kind, opnds = m2.groups()
+    return name, rtype, kind, opnds
+
+
+def _shape_elems_bytes(text: str) -> Tuple[int, int]:
+    elems, nbytes = 0, 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+_SCOPE_RE = re.compile(r'op_name="([^"]*)"')
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+    elems: int
+    nbytes: int
+    raw_operands: str = ""
+
+    @property
+    def scope(self) -> str:
+        m = _SCOPE_RE.search(self.attrs)
+        return m.group(1) if m else ""
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    by_name: Dict[str, Op] = dataclasses.field(default_factory=dict)
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str, str]:
+    """Split 'opnd, opnd), attrs...' -> ([opnd names], attrs, raw_text)."""
+    depth = 1
+    end = len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    opnd_text = rest[:end]
+    attrs = rest[end + 1:]
+    names = re.findall(r"%([\w.\-]+)", opnd_text)
+    return names, attrs, opnd_text
+
+
+def parse_hlo(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        s = raw.strip()
+        if not s or s.startswith("//"):
+            continue
+        if s.endswith("{") and "=" not in s.split("(")[0]:
+            m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+            if m and "->" in s:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                continue
+        if s == "}":
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_op_line(s)
+        if parsed is None:
+            continue
+        name, rtype, kind, rest = parsed
+        operands, attrs, raw = _split_operands(rest)
+        elems, nbytes = _shape_elems_bytes(rtype)
+        op = Op(name, kind, rtype, operands, attrs, elems, nbytes, raw)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+    return comps, entry
+
+
+def _attr_comps(attrs: str) -> Dict[str, List[str]]:
+    out = {}
+    for attr in ("calls", "to_apply", "body", "condition",
+                 "branch_computations"):
+        m = re.search(attr + r"=([{]?)%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)",
+                      attrs)
+        if m:
+            out[attr] = [n.strip().lstrip("%")
+                         for n in m.group(2).split(",")]
+    return out
+
+
+class HloCostAnalyzer:
+    """``vmem_scopes``: names of jax.named_scope regions whose intermediate
+    tensors are modeled as VMEM-resident (a Pallas kernel on the TPU
+    target): in-scope ops contribute FLOPs but their bytes count only at
+    the scope boundary -- operands produced outside the scope (kernel
+    inputs) and results consumed outside it (kernel outputs)."""
+
+    def __init__(self, hlo: str, vmem_scopes: tuple = ()):
+        self.vmem_scopes = tuple(vmem_scopes)
+        self.comps, self.entry = parse_hlo(hlo)
+        # consumer map per computation (for scope-boundary detection)
+        self._consumers: Dict[Tuple[str, str], List[str]] = {}
+        for cname, comp in self.comps.items():
+            for op in comp.ops:
+                for src in op.operands:
+                    self._consumers.setdefault((cname, src), []).append(
+                        op.name)
+        self._const_vals: Dict[Tuple[str, str], int] = {}
+        # capture integer constant literals per computation from raw text
+        cur = None
+        for raw in hlo.splitlines():
+            s = raw.strip()
+            if s.endswith("{") and "->" in s:
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", s)
+                cur = m.group(1) if m else cur
+                continue
+            m = re.match(
+                r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*[su]\d+\[\]\s+"
+                r"constant\((-?\d+)\)", s)
+            if m and cur:
+                self._const_vals[(cur, m.group(1))] = int(m.group(2))
+        self._memo: Dict[Tuple[str, bool], "Cost"] = {}
+
+    def trip_count(self, cond_name: str) -> int:
+        vals = [v for (c, _), v in self._const_vals.items()
+                if c == cond_name and v > 0]
+        return max(vals) if vals else 1
+
+    def cost(self) -> "Cost":
+        assert self.entry, "no ENTRY computation found"
+        return self._comp_cost(self.entry, top=True)
+
+    _SLICING = {"dynamic-slice", "slice", "gather"}
+    _UPDATING = {"dynamic-update-slice", "scatter"}
+
+    def _comp_scoped(self, comp: Computation) -> bool:
+        """True if the computation's ops are predominantly inside a VMEM
+        scope (XLA rewrites drop metadata on some ops, e.g. decomposed
+        dots, so membership is inferred per computation)."""
+        if not self.vmem_scopes:
+            return False
+        cached = getattr(comp, "_scoped", None)
+        if cached is not None:
+            return cached
+        scoped = [op.scope for op in comp.ops if op.scope]
+        frac = (sum(1 for sc in scoped
+                    if any(s in sc for s in self.vmem_scopes)) /
+                len(scoped)) if scoped else 0.0
+        comp._scoped = frac >= 0.5
+        return comp._scoped
+
+    def _in_scope(self, op: Op, comp: Computation) -> bool:
+        if not self.vmem_scopes:
+            return False
+        if op.scope:
+            return any(s in op.scope for s in self.vmem_scopes)
+        return self._comp_scoped(comp)
+
+    def _traffic(self, comp: Computation, op: Op, wbytes: int) -> int:
+        """Result-write + operand-read bytes with VMEM-scope boundaries."""
+        if not self._in_scope(op, comp):
+            return wbytes + self._operand_bytes(comp, op)
+        total = 0
+        consumers = self._consumers.get((comp.name, op.name), [])
+        escapes = (op is comp.ops[-1]) or any(
+            not self._in_scope(comp.by_name[c], comp)
+            for c in consumers if c in comp.by_name)
+        if escapes:
+            total += wbytes
+        total += self._operand_bytes(
+            comp, op,
+            include=lambda src: src.kind == "parameter" or
+            not self._in_scope(src, comp))
+        return total
+
+    def _operand_bytes(self, comp: Computation, op: Op, include=None) -> int:
+        """Traffic model for operand reads, counting only *touched* bytes:
+
+        - slicing ops read only their result-sized window;
+        - dynamic-update-slice reads/writes only the update operand;
+        - a fusion operand consumed exclusively by slicing ops inside the
+          fused computation contributes those slices' bytes, not its full
+          size (critical for KV caches inside scan bodies);
+        - ``include(src_op)``: optional filter (VMEM-scope boundaries).
+        """
+        def src_of(idx):
+            if idx < len(op.operands):
+                return comp.by_name.get(op.operands[idx])
+            return None
+
+        def counted(src):
+            return src is not None and (include is None or include(src))
+
+        if op.kind in self._SLICING:
+            return op.nbytes if counted(src_of(0)) else 0
+        if op.kind in self._UPDATING and len(op.operands) >= 2:
+            upd = src_of(1)
+            if not counted(src_of(0)) and not counted(upd):
+                return 0
+            return upd.nbytes if upd is not None else op.nbytes
+
+        fused = None
+        if op.kind == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+            if m:
+                fused = self.comps.get(m.group(1))
+
+        total = 0
+        for idx, name in enumerate(op.operands):
+            src = comp.by_name.get(name)
+            if src is None or not counted(src):
+                continue
+            nbytes = src.nbytes
+            if fused is not None:
+                nbytes = self._fusion_param_traffic(fused, idx, nbytes)
+            total += nbytes
+        return total
+
+    def _fusion_param_traffic(self, fused: Computation, idx: int,
+                              full_bytes: int) -> int:
+        """Bytes read from fusion parameter ``idx`` inside ``fused``."""
+        pname = None
+        for o in fused.ops:
+            if o.kind == "parameter" and o.raw_operands.strip() == str(idx):
+                pname = o.name
+                break
+        if pname is None:
+            return full_bytes
+        # collect consumers, looking through dtype converts / bitcasts
+        # (CPU-backend convert chains around KV caches)
+        names = {pname}
+        frontier = [pname]
+        consumers = []
+        seen = set()
+        while frontier:
+            n = frontier.pop()
+            for o in fused.ops:
+                if o.name in seen or n not in o.operands:
+                    continue
+                if o.kind in _TRANSPARENT:
+                    seen.add(o.name)
+                    frontier.append(o.name)
+                else:
+                    seen.add(o.name)
+                    consumers.append(o)
+        if not consumers:
+            return 0
+        total = 0
+        for o in consumers:
+            if o.kind in self._SLICING:
+                total += o.nbytes            # reads only the window
+            elif o.kind in self._UPDATING:
+                upd = fused.by_name.get(o.operands[1]) \
+                    if len(o.operands) >= 2 else None
+                total += upd.nbytes if upd is not None else o.nbytes
+            else:
+                return full_bytes            # genuinely reads it all
+        return min(total, full_bytes)
+
+    def _comp_cost(self, name: str, top: bool) -> "Cost":
+        key = (name, top)
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is not None:
+            # guard against recursion
+            self._memo[key] = total
+            for op in comp.ops:
+                total.add(self._op_cost(comp, op, top))
+        self._memo[key] = total
+        return total
+
+    def _op_cost(self, comp: Computation, op: Op, top: bool) -> "Cost":
+        c = Cost()
+        kind = op.kind
+        if kind in _FREE:
+            return c
+        calls = _attr_comps(op.attrs)
+
+        for k in COLLECTIVES:
+            if (kind == k or kind.startswith(k + "-")) and \
+                    not kind.endswith("-done"):
+                c.collective_bytes[k] += op.nbytes
+                c.collective_counts[k] += 1
+                c.bytes += self._traffic(comp, op, op.nbytes)
+                return c
+
+        if kind == "while":
+            body = calls.get("body", [None])[0]
+            cond = calls.get("condition", [None])[0]
+            if body in self.comps and cond in self.comps:
+                trips = self.trip_count(cond)
+                inner = Cost()
+                inner.add(self._comp_cost(body, top=True))
+                inner.add(self._comp_cost(cond, top=True))
+                c.add(inner, mult=max(trips, 1))
+            return c
+
+        if kind in ("fusion", "call", "async-start"):
+            for names in calls.values():
+                for n in names:
+                    c.add(self._comp_cost(n, top=False))
+            if top:
+                wbytes = op.nbytes
+                fused = self.comps.get(calls.get("calls", [""])[0])
+                if fused is not None and fused.ops:
+                    root = fused.ops[-1]
+                    # walk back through convert/bitcast wrappers to the
+                    # real producer (CPU bf16<->f32 chains)
+                    hops = 0
+                    while root is not None and root.kind in _TRANSPARENT \
+                            and root.operands and hops < 8:
+                        root = fused.by_name.get(root.operands[0])
+                        hops += 1
+                    if root is not None and root.kind in self._UPDATING \
+                            and len(root.operands) >= 2:
+                        upd = fused.by_name.get(root.operands[1])
+                        if upd is not None:
+                            wbytes = upd.nbytes
+                c.bytes += self._traffic(comp, op, wbytes)
+            return c
+
+        if kind == "conditional":
+            worst = None
+            for names in calls.values():
+                for n in names:
+                    bc = self._comp_cost(n, top=True)
+                    if worst is None or bc.flops > worst.flops:
+                        worst = bc
+            if worst:
+                c.add(worst)
+            if top:
+                c.bytes += self._traffic(comp, op, op.nbytes)
+            return c
+
+        if kind == "dot":
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            k_elems = 1
+            lhs = comp.by_name.get(op.operands[0]) if op.operands else None
+            if m and m.group(1) and lhs is not None:
+                lm = _SHAPE_RE.search(lhs.result_type)
+                if lm and lm.group(2):
+                    dims = [int(d) for d in lm.group(2).split(",")]
+                    for d in m.group(1).split(","):
+                        if int(d) < len(dims):
+                            k_elems *= dims[int(d)]
+            c.flops += 2.0 * op.elems * k_elems
+            if top:
+                c.bytes += self._traffic(comp, op, op.nbytes)
+            return c
+
+        if kind == "convolution":
+            c.flops += 2.0 * op.elems
+            if top:
+                c.bytes += self._traffic(comp, op, op.nbytes)
+            return c
+
+        if kind in _ARITH or kind in _REDUCE:
+            c.flops += op.elems
+            if top:
+                c.bytes += self._traffic(comp, op, op.nbytes)
+            return c
+
+        if kind in _TRANSCENDENTAL:
+            c.flops += op.elems
+            c.transcendental += op.elems
+            if top:
+                c.bytes += self._traffic(comp, op, op.nbytes)
+            return c
+
+        if kind in _MOVEMENT:
+            if top:
+                wbytes = op.nbytes
+                if kind in self._UPDATING and len(op.operands) >= 2:
+                    upd = comp.by_name.get(op.operands[1])
+                    if upd is not None:
+                        wbytes = upd.nbytes  # in-place window write
+                c.bytes += self._traffic(comp, op, wbytes)
+            return c
+        return c
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendental: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+    collective_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendental += other.transcendental * mult
+        for k in COLLECTIVES:
+            self.collective_bytes[k] += other.collective_bytes[k] * mult
+            self.collective_counts[k] += other.collective_counts[k] * mult
+
+
+def analyze(hlo: str, vmem_scopes: tuple = ()) -> dict:
+    cost = HloCostAnalyzer(hlo, vmem_scopes=vmem_scopes).cost()
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "transcendental": cost.transcendental,
+        "collective_bytes": dict(cost.collective_bytes),
+        "collective_counts": dict(cost.collective_counts),
+    }

@@ -1,0 +1,105 @@
+"""Training launcher CLI.
+
+  PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
+      --steps 50 --batch 8 --seq 256 [--smoke] [--precision bf16] \
+      [--strategy psum|ring|hierarchical|bucketed] [--accum 4]
+
+``--smoke`` swaps in the reduced same-family config so any architecture can
+be exercised on CPU.  On a one-device host the mesh is (1, n_devices);
+``--dp`` selects the paper-faithful pure-data-parallel shard_map path with
+the explicit collective strategy.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import InputShape, TrainConfig
+from repro.core.amp import make_policy
+from repro.data.pipeline import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models import api
+from repro.sharding import make_rules
+from repro.train.train_step import (init_train_state, make_train_step_dp,
+                                    make_train_step_gspmd)
+from repro.train.trainer import train_loop
+from repro.utils import logger, tree_count
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--precision", default="bf16")
+    ap.add_argument("--optimizer", default="lamb")
+    ap.add_argument("--strategy", default="psum")
+    ap.add_argument("--dp", action="store_true",
+                    help="paper-faithful pure-DP shard_map mode")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="ZeRO-1 pure data parallelism (GSPMD mode)")
+    ap.add_argument("--moe-impl", default="a2a")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if cfg.is_encoder_only:
+        raise SystemExit("use examples/pretrain_bert.py for BERT")
+
+    tcfg = TrainConfig(precision=args.precision, accum_steps=args.accum,
+                       collective_strategy=args.strategy,
+                       optimizer=args.optimizer, total_steps=args.steps,
+                       warmup_steps=max(2, args.steps // 10),
+                       moe_impl=args.moe_impl, pure_dp=args.pure_dp,
+                       seed=args.seed)
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    mesh = make_host_mesh()
+    rules = make_rules(fsdp=tcfg.fsdp, pure_dp=tcfg.pure_dp)
+    policy = make_policy(tcfg.precision)
+
+    params, specs = api.init_params(jax.random.PRNGKey(args.seed), cfg)
+    logger.info("arch %s: %.2fM params (smoke=%s)", cfg.arch_id,
+                tree_count(params) / 1e6, args.smoke)
+    state = init_train_state(params, policy, tcfg)
+    del params
+
+    if args.dp:
+        step_fn, _ = make_train_step_dp(cfg, tcfg, mesh, shape)
+    else:
+        shapes, specs_t = api.abstract_params(cfg)
+        step_fn, _ = make_train_step_gspmd(cfg, tcfg, mesh, rules, specs_t,
+                                           shapes, shape)
+
+    def batches():
+        it = lm_batches(args.seed, cfg.vocab_size, args.batch, args.seq)
+        for b in it:
+            out = {"tokens": b["tokens"]}
+            if cfg.is_encoder_decoder:
+                out["frames"] = 0.1 * np.random.default_rng(0).standard_normal(
+                    (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
+            if cfg.n_vision_tokens:
+                out["vision"] = 0.1 * np.random.default_rng(0).standard_normal(
+                    (args.batch, cfg.n_vision_tokens,
+                     cfg.d_model)).astype(np.float32)
+            yield out
+
+    state, history = train_loop(
+        step_fn, state, batches(), total_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        tokens_per_step=args.batch * args.seq)
+    logger.info("final loss: %.4f", history[-1]["loss"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

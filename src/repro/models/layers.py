@@ -1,0 +1,611 @@
+"""Core layer library: norms, embeddings, RoPE/M-RoPE, attention, MLPs.
+
+All layers are pure functions over explicit param pytrees.  Init functions
+return ``(params, specs)`` where ``specs`` mirrors ``params`` with tuples of
+logical axis names (see repro/sharding.py).
+
+Dtype discipline (paper §4.2 adapted): matmuls run in ``policy.compute_dtype``;
+softmax / normalisation / logit reductions run in ``policy.reduce_dtype``
+(fp32) -- the paper's "numerically unsafe op" category expressed statically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import functools
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.sharding import (EMBED, FF, HEAD_DIM, HEADS, KV_HEADS, SEQ, VOCAB,
+                            lshard)
+
+Params = Any
+Specs = Any
+
+
+def trunc_normal(key, shape, stddev=0.02, dtype=jnp.float32):
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None) -> Tuple[Params, Specs]:
+    d = d or cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return ({"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+                {"scale": (EMBED,), "bias": (EMBED,)})
+    return ({"scale": jnp.ones((d,))}, {"scale": (EMBED,)})
+
+
+def apply_norm(params: Params, x: jax.Array, cfg: ModelConfig,
+               policy: Policy) -> jax.Array:
+    xf = x.astype(policy.reduce_dtype)
+    if cfg.norm_kind == "layernorm":
+        mean = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(policy.reduce_dtype) + \
+            params["bias"].astype(policy.reduce_dtype)
+    else:
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"].astype(policy.reduce_dtype)
+    return y.astype(policy.compute_dtype)
+
+
+def rms_norm_simple(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+                    out_dtype=None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    y = y * scale.astype(jnp.float32)
+    return y.astype(out_dtype or x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: Tuple[int, ...]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: (3, B, S) -- (temporal, height, width) position ids.
+    ``sections`` partitions the Dh/2 frequency slots among the three axes.
+    """
+    dh = x.shape[-1]
+    assert sum(sections) == dh // 2, (sections, dh)
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    # pick, per frequency slot, which positional axis drives it
+    sect_id = jnp.repeat(jnp.arange(len(sections)),
+                         jnp.asarray(sections), total_repeat_length=dh // 2)
+    # gather: for slot j use positions3[sect_id[j]]
+    pos_per_slot = positions3.astype(jnp.float32)[sect_id]  # (Dh/2, B, S)
+    angles = jnp.moveaxis(pos_per_slot, 0, -1) * freqs       # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def position_encode(q, k, positions, cfg: ModelConfig):
+    if cfg.pos_kind == "rope":
+        assert positions.ndim == 2
+        return (apply_rope(q, positions, cfg.rope_theta),
+                apply_rope(k, positions, cfg.rope_theta))
+    if cfg.pos_kind == "mrope":
+        assert positions.ndim == 3, "mrope takes (3, B, S) positions"
+        return (apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    return q, k  # learned / none: handled at the embedding level
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, cross: bool = False
+                   ) -> Tuple[Params, Specs]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    std_o = 0.02 / math.sqrt(2 * cfg.n_layers)
+    params = {
+        "wq": trunc_normal(ks[0], (d, h, dh)),
+        "wk": trunc_normal(ks[1], (d, kv, dh)),
+        "wv": trunc_normal(ks[2], (d, kv, dh)),
+        "wo": trunc_normal(ks[3], (h, dh, d), stddev=std_o),
+    }
+    specs = {
+        "wq": (EMBED, HEADS, None),
+        "wk": (EMBED, KV_HEADS, None),
+        "wv": (EMBED, KV_HEADS, None),
+        "wo": (HEADS, None, EMBED),
+    }
+    if cfg.qkv_bias:
+        params.update(bq=jnp.zeros((h, dh)), bk=jnp.zeros((kv, dh)),
+                      bv=jnp.zeros((kv, dh)))
+        specs.update(bq=(HEADS, None), bk=(KV_HEADS, None), bv=(KV_HEADS, None))
+    if cfg.qk_norm:
+        params.update(q_norm=jnp.ones((dh,)), k_norm=jnp.ones((dh,)))
+        specs.update(q_norm=(None,), k_norm=(None,))
+    return params, specs
+
+
+def _seq_parallel() -> bool:
+    from repro.sharding import current_rules
+    rules = current_rules()
+    return rules is not None and rules.physical(SEQ) is not None
+
+
+def _sp_shard(x, *axes):
+    """Constrain only under sequence parallelism; unconstrained otherwise
+    (constraints would pin GQA head dims replicated when kv_heads does not
+    divide the model axis -- measured regression in EXPERIMENTS §Perf)."""
+    return lshard(x, *axes) if _seq_parallel() else x
+
+
+def _soft_cap(logits: jax.Array, cap: float) -> jax.Array:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits
+
+
+def naive_attention(q, k, v, *, causal: bool, window: int = 0,
+                    softcap: float = 0.0, q_offset: int = 0,
+                    kv_len: Optional[jax.Array] = None,
+                    reduce_dtype=jnp.float32) -> jax.Array:
+    """Reference attention.  q: (B,Sq,H,Dh); k,v: (B,Skv,KV,Dh).  GQA via
+    head grouping.  Used for short sequences and as the flash oracle."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    # keep operands in storage dtype; accumulate in fp32 (MXU-native) --
+    # casting k/v first makes XLA materialise fp32 copies of the KV cache
+    logits = jnp.einsum("bqvgd,bkvd->bvgqk", qg, k,
+                        preferred_element_type=reduce_dtype) / math.sqrt(dh)
+    logits = _soft_cap(logits, softcap)
+    qi = q_offset + jnp.arange(sq)[:, None]
+    ki = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window:
+        mask &= ki > qi - window
+    if kv_len is not None:
+        mask = mask & (ki < kv_len)
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bvgqk,bkvd->bqvgd", probs.astype(v.dtype), v,
+                     preferred_element_type=reduce_dtype)
+    return out.reshape(b, sq, h, dh)
+
+
+def _chunk_mask(nq, q_chunk, kv_chunk, j, causal, window):
+    qi = jnp.arange(nq)[:, None] * q_chunk + jnp.arange(q_chunk)[None]
+    ki = j * kv_chunk + jnp.arange(kv_chunk)
+    mask = jnp.ones((nq, q_chunk, kv_chunk), bool)
+    if causal:
+        mask &= ki[None, None, :] <= qi[:, :, None]
+    if window:
+        mask &= ki[None, None, :] > qi[:, :, None] - window
+    return mask
+
+
+def _flash_fwd(q, k, v, *, causal, window, softcap, q_chunk, kv_chunk,
+               reduce_dtype):
+    """Online-softmax forward.  Returns (out (B,Sq,H,Dh), lse (B,nq,qc,KV,g))."""
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    qg = q.reshape(b, nq, q_chunk, kvh, g, dh)
+    # keep the q chunks sequence-sharded through the reshape (GSPMD loses
+    # the seq sharding across the split otherwise and all-gathers q)
+    qg = _sp_shard(qg, "batch", "seq", None, None, None, None)
+    kc = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kvh, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kvh, dh), 1, 0)
+
+    m0 = jnp.full((b, nq, q_chunk, kvh, g), -jnp.inf, reduce_dtype)
+    l0 = jnp.zeros((b, nq, q_chunk, kvh, g), reduce_dtype)
+    a0 = jnp.zeros((b, nq, q_chunk, kvh, g, dh), reduce_dtype)
+    m0 = _sp_shard(m0, "batch", "seq", None, None, None)
+    l0 = _sp_shard(l0, "batch", "seq", None, None, None)
+    a0 = _sp_shard(a0, "batch", "seq", None, None, None, None)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        logits = jnp.einsum("bnqvgd,bkvd->bnqvgk", qg, kj,
+                            preferred_element_type=reduce_dtype) * scale
+        logits = _soft_cap(logits, softcap)
+        mask = _chunk_mask(nq, q_chunk, kv_chunk, j, causal, window)
+        logits = jnp.where(mask[None, :, :, None, None, :], logits, -jnp.inf)
+        new_m = jnp.maximum(m, logits.max(axis=-1))
+        safe_m = jnp.where(jnp.isinf(new_m), 0.0, new_m)
+        p = jnp.exp(logits - safe_m[..., None])
+        p = jnp.where(mask[None, :, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - safe_m))
+        new_l = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bnqvgk,bkvd->bnqvgd", p.astype(vj.dtype), vj,
+                        preferred_element_type=reduce_dtype)
+        new_acc = acc * corr[..., None] + pv
+        return (new_m, new_l, new_acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(nk), kc, vc))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-37)), jnp.inf)
+    out = out.reshape(b, sq, h, dh)
+    out = _sp_shard(out, "batch", "seq", None, None)
+    return out, lse
+
+
+def _flash_bwd(q, k, v, out, lse, dout, *, causal, window, softcap,
+               q_chunk, kv_chunk, reduce_dtype):
+    """FlashAttention backward: recompute p per chunk from saved lse.
+
+    dq accumulates over kv chunks (scan carry); dk/dv are emitted per kv
+    chunk (scan ys).  Memory stays O(S * Dh) -- no saved score carries.
+    """
+    b, sq, h, dh = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / math.sqrt(dh)
+
+    qspec6 = ("batch", "seq", None, None, None, None)
+    qg = _sp_shard(q.reshape(b, nq, q_chunk, kvh, g, dh), *qspec6)
+    og = _sp_shard(out.reshape(b, nq, q_chunk, kvh, g, dh), *qspec6)
+    dog = _sp_shard(dout.reshape(b, nq, q_chunk, kvh, g, dh), *qspec6
+                    ).astype(reduce_dtype)
+    delta = jnp.sum(dog * og.astype(reduce_dtype), axis=-1)  # (b,nq,qc,kv,g)
+    kc = jnp.moveaxis(k.reshape(b, nk, kv_chunk, kvh, dh), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nk, kv_chunk, kvh, dh), 1, 0)
+
+    dq0 = _sp_shard(jnp.zeros((b, nq, q_chunk, kvh, g, dh), reduce_dtype),
+                    *qspec6)
+
+    def body(dq, inp):
+        j, kj, vj = inp
+        raw = jnp.einsum("bnqvgd,bkvd->bnqvgk", qg, kj,
+                         preferred_element_type=reduce_dtype) * scale
+        capped = _soft_cap(raw, softcap)
+        mask = _chunk_mask(nq, q_chunk, kv_chunk, j, causal, window)
+        capped = jnp.where(mask[None, :, :, None, None, :], capped, -jnp.inf)
+        p = jnp.exp(capped - lse[..., None])
+        p = jnp.where(mask[None, :, :, None, None, :], p, 0.0)
+        dp = jnp.einsum("bnqvgd,bkvd->bnqvgk", dog.astype(vj.dtype), vj,
+                        preferred_element_type=reduce_dtype)
+        ds = p * (dp - delta[..., None])
+        if softcap:
+            ds = ds * (1.0 - jnp.square(
+                jnp.where(mask[None, :, :, None, None, :],
+                          capped / softcap, 0.0)))
+        dsc = ds.astype(kj.dtype)
+        dq = dq + jnp.einsum("bnqvgk,bkvd->bnqvgd", dsc, kj,
+                             preferred_element_type=reduce_dtype) * scale
+        dk_j = jnp.einsum("bnqvgk,bnqvgd->bkvd", dsc, qg.astype(dsc.dtype),
+                          preferred_element_type=reduce_dtype) * scale
+        dv_j = jnp.einsum("bnqvgk,bnqvgd->bkvd", p.astype(dog.dtype), dog,
+                          preferred_element_type=reduce_dtype)
+        return dq, (dk_j, dv_j)
+
+    dq, (dk, dv) = jax.lax.scan(body, dq0, (jnp.arange(nk), kc, vc))
+    dq = dq.reshape(b, sq, h, dh).astype(q.dtype)
+    dk = jnp.moveaxis(dk, 0, 1).reshape(b, skv, kvh, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dv, 0, 1).reshape(b, skv, kvh, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _flash_fn(causal, window, softcap, q_chunk, kv_chunk, reduce_dtype):
+    kw = dict(causal=causal, window=window, softcap=softcap,
+              q_chunk=q_chunk, kv_chunk=kv_chunk,
+              reduce_dtype=reduce_dtype)
+
+    @jax.custom_vjp
+    def fn(q, k, v):
+        with jax.named_scope("flash_attention"):
+            return _flash_fwd(q, k, v, **kw)[0]
+
+    def fwd(q, k, v):
+        with jax.named_scope("flash_attention"):
+            out, lse = _flash_fwd(q, k, v, **kw)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        with jax.named_scope("flash_attention"):
+            return _flash_bwd(q, k, v, out, lse, dout, **kw)
+
+    fn.defvjp(fwd, bwd)
+    return fn
+
+
+import os as _os
+
+# attention backend for the model layer: "jnp" (flash math in XLA chunks,
+# the default off-TPU and the kernels' oracle), "pallas" (the Mosaic
+# kernels, default on TPU), or "pallas_interpret" (kernel bodies executed
+# in Python -- integration tests).
+_ATTN_IMPL = _os.environ.get("REPRO_ATTENTION_IMPL", "")
+
+
+def attention_impl() -> str:
+    if _ATTN_IMPL:
+        return _ATTN_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int = 0,
+                      softcap: float = 0.0, q_chunk: int = 512,
+                      kv_chunk: int = 1024,
+                      reduce_dtype=jnp.float32) -> jax.Array:
+    """Flash attention with a FlashAttention-2 custom VJP.
+
+    Never materialises the (Sq, Skv) score matrix in either pass: the
+    forward streams KV chunks with online-softmax stats; the backward
+    recomputes probabilities per chunk from the saved logsumexp (activation
+    memory O(S*Dh) instead of the O(S^2/chunk) carries scan-autodiff would
+    save).  On TPU (or REPRO_ATTENTION_IMPL=pallas[_interpret]) self-
+    attention dispatches to the Pallas fwd/bwd kernels; the jnp chunks are
+    the same math and serve as their oracle.
+    """
+    b, sq, h, dh = q.shape
+    skv = k.shape[1]
+    impl = attention_impl()
+    if impl != "jnp" and sq == skv and (sq % 128 == 0 or
+                                        impl == "pallas_interpret"):
+        from repro.kernels import ops as kops
+        t = lambda x: jnp.swapaxes(x, 1, 2)  # (B,S,H,D) -> (B,H,S,D)
+        bq = _pick_chunk(sq, 256)
+        bk = _pick_chunk(skv, 256)
+        out = kops.flash_attention(
+            t(q), t(k), t(v), causal=causal, window=window, softcap=softcap,
+            impl=impl, block_q=bq, block_k=bk)
+        return t(out)
+    q_chunk = _pick_chunk(sq, q_chunk)
+    kv_chunk = _pick_chunk(skv, kv_chunk)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0
+    fn = _flash_fn(bool(causal), int(window), float(softcap),
+                   int(q_chunk), int(kv_chunk), reduce_dtype)
+    return fn(q, k, v)
+
+
+def _pick_chunk(n: int, target: int) -> int:
+    """Largest divisor of n that is <= target (e.g. whisper's 1500 frames
+    -> 500-wide chunks instead of failing the 512 default)."""
+    target = min(target, n)
+    if n % target == 0:
+        return target
+    for c in range(target, 0, -1):
+        if n % c == 0:
+            return c
+    return n
+
+
+def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
+                    policy: Policy, *, mixer_kind: str = "attn",
+                    positions: Optional[jax.Array] = None,
+                    kv_source: Optional[jax.Array] = None,
+                    cache: Optional[dict] = None,
+                    cache_pos: Optional[jax.Array] = None,
+                    kv_len: Optional[jax.Array] = None,
+                    static_kv: bool = False,
+                    return_cache: bool = False,
+                    use_rope: bool = True):
+    """Self/cross attention with optional KV cache.
+
+    Returns (y, new_cache_or_None).
+    cache: {"k": (B, Smax, KV, Dh), "v": ...} -- decode writes the new token
+    at ``cache_pos`` (ring-buffer index) and attends over ``kv_len`` valid
+    slots.  ``static_kv``: cross-attention -- KV come from ``kv_source``
+    (prefill) or verbatim from ``cache`` (decode); never updated in place.
+    """
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    causal = mixer_kind != "attn_bidir" and not static_kv
+    window = cfg.sliding_window if mixer_kind == "attn_local" else 0
+    softcap = cfg.attn_logit_softcap
+
+    xc = x.astype(policy.compute_dtype)
+    q = jnp.einsum("bsd,dhk->bshk", xc, params["wq"].astype(policy.compute_dtype))
+
+    if static_kv and kv_source is None:
+        # decode-time cross attention: reuse the prefilled KV
+        assert cache is not None
+        k, v = cache["k"], cache["v"]
+    else:
+        src = (kv_source if kv_source is not None else xc).astype(
+            policy.compute_dtype)
+        k = jnp.einsum("bsd,dhk->bshk", src,
+                       params["wk"].astype(policy.compute_dtype))
+        v = jnp.einsum("bsd,dhk->bshk", src,
+                       params["wv"].astype(policy.compute_dtype))
+        if cfg.qkv_bias:
+            k = k + params["bk"].astype(k.dtype)
+            v = v + params["bv"].astype(v.dtype)
+        if cfg.qk_norm:
+            k = rms_norm_simple(k, params["k_norm"], cfg.norm_eps)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+    if cfg.qk_norm:
+        q = rms_norm_simple(q, params["q_norm"], cfg.norm_eps)
+
+    if use_rope and not static_kv and cfg.pos_kind in ("rope", "mrope"):
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        q, k = position_encode(q, k, positions, cfg)
+
+    if _seq_parallel():
+        q = lshard(q, "batch", "seq", None, None)
+        k = lshard(k, "batch", "seq", None, None)
+        v = lshard(v, "batch", "seq", None, None)
+    else:
+        q = lshard(q, "batch", None, "heads", None)
+        k = lshard(k, "batch", None, "kv_heads", None)
+        v = lshard(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if static_kv:
+        if return_cache:
+            new_cache = {"k": k, "v": v} if kv_source is not None else cache
+        out = naive_attention(q, k, v, causal=False, softcap=softcap,
+                              reduce_dtype=policy.reduce_dtype)
+    elif cache is not None:
+        # decode: write new kv at ring index cache_pos, attend kv_len slots
+        ck, cv = cache["k"], cache["v"]
+        ck = jax.lax.dynamic_update_slice(
+            ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        if return_cache:
+            new_cache = {"k": ck, "v": cv}
+        if kv_len is None:
+            kv_len = cache_pos + s
+        # no causal/window masks: the ring buffer's kv_len IS the window
+        out = naive_attention(q, ck, cv, causal=False, window=0,
+                              softcap=softcap, q_offset=0,
+                              kv_len=kv_len, reduce_dtype=policy.reduce_dtype)
+    else:
+        sq, skv = q.shape[1], k.shape[1]
+        if sq * skv > 512 * 512:
+            out = chunked_attention(q, k, v, causal=causal, window=window,
+                                    softcap=softcap,
+                                    reduce_dtype=policy.reduce_dtype)
+        else:
+            out = naive_attention(q, k, v, causal=causal, window=window,
+                                  softcap=softcap,
+                                  reduce_dtype=policy.reduce_dtype)
+        if return_cache:
+            new_cache = {"k": k, "v": v}
+
+    out = out.astype(policy.compute_dtype)
+    wo = params["wo"].astype(policy.compute_dtype)
+    from repro.sharding import current_rules
+    rules = current_rules()
+    if rules is not None and rules.physical(SEQ) is not None:
+        # sequence-parallel mode: pin the output projection replicated at
+        # the use site -- otherwise GSPMD resolves the wo[embed->data] vs
+        # out[batch->data] conflict by all-gathering the (B,S,H,Dh)
+        # activation (~10x the weight bytes; measured in EXPERIMENTS §Perf)
+        wo = lshard(wo, None, None, None)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    y = lshard(y, "batch", "seq", None)
+    return y, new_cache
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         dtype=jnp.bfloat16) -> dict:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std_o = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        params = {"wi": trunc_normal(ks[0], (d, f)),
+                  "wg": trunc_normal(ks[1], (d, f)),
+                  "wo": trunc_normal(ks[2], (f, d), stddev=std_o)}
+        specs = {"wi": (EMBED, FF), "wg": (EMBED, FF), "wo": (FF, EMBED)}
+    else:  # gelu (BERT/whisper): biases included
+        params = {"wi": trunc_normal(ks[0], (d, f)), "bi": jnp.zeros((f,)),
+                  "wo": trunc_normal(ks[1], (f, d), stddev=std_o),
+                  "bo": jnp.zeros((d,))}
+        specs = {"wi": (EMBED, FF), "bi": (FF,), "wo": (FF, EMBED),
+                 "bo": (EMBED,)}
+    return params, specs
+
+
+def gelu_tanh(x: jax.Array) -> jax.Array:
+    """The paper's §4.3 GELU approximation (fused in kernels/bias_gelu.py)."""
+    return 0.5 * x * (1.0 + jnp.tanh(
+        math.sqrt(2.0 / math.pi) * (x + 0.044715 * jnp.power(x, 3))))
+
+
+def apply_mlp(params: Params, x: jax.Array, cfg: ModelConfig,
+              policy: Policy) -> jax.Array:
+    xc = x.astype(policy.compute_dtype)
+    # NOTE (EXPERIMENTS.md §Perf, refuted hypothesis): switching the MLP to
+    # Megatron-style TP under sequence parallelism (gather tokens over
+    # 'model', keep ff-sharded weights, reduce-scatter back) measured 2.4x
+    # MORE collective bytes than weight-gathering -- GSPMD gathers the
+    # tokens in fp32 per matmul without reuse.  Weight-gather mode kept.
+    hspec = ("batch", "seq", "ff")
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else gelu_tanh
+        hi = xc @ params["wi"].astype(policy.compute_dtype)
+        hg = xc @ params["wg"].astype(policy.compute_dtype)
+        hi = lshard(hi, *hspec)
+        hg = lshard(hg, *hspec)
+        h = act(hg) * hi
+        y = h @ params["wo"].astype(policy.compute_dtype)
+    else:
+        h = xc @ params["wi"].astype(policy.compute_dtype) + \
+            params["bi"].astype(policy.compute_dtype)
+        h = lshard(h, *hspec)
+        h = gelu_tanh(h)
+        y = h @ params["wo"].astype(policy.compute_dtype) + \
+            params["bo"].astype(policy.compute_dtype)
+    return lshard(y, "batch", "seq", None)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
+    ks = jax.random.split(key, 3)
+    params = {"tok": trunc_normal(ks[0], (cfg.vocab_size, cfg.d_model))}
+    specs = {"tok": (VOCAB, EMBED)}
+    if cfg.pos_kind == "learned":
+        assert cfg.max_position > 0
+        params["pos"] = trunc_normal(ks[1], (cfg.max_position, cfg.d_model))
+        specs["pos"] = (None, EMBED)
+    return params, specs
+
+
+def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig,
+                 policy: Policy, *, pos_offset=0) -> jax.Array:
+    x = jnp.take(params["tok"], tokens, axis=0).astype(policy.compute_dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), policy.compute_dtype)
+    if cfg.pos_kind == "learned":
+        s = tokens.shape[-1]
+        pos_ids = pos_offset + jnp.arange(s)
+        x = x + jnp.take(params["pos"], pos_ids, axis=0).astype(x.dtype)
+    return lshard(x, "batch", "seq", None)

@@ -1,0 +1,181 @@
+"""Mamba (S6) selective-state-space mixer, as used by Jamba's hybrid blocks.
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan kernel becomes a
+*chunked associative scan* -- ``lax.scan`` over sequence chunks with a
+parallel ``lax.associative_scan`` inside each chunk.  This keeps the
+(B, L, d_inner, d_state) working set bounded by the chunk length (VMEM-
+friendly) while exposing intra-chunk parallelism to the VPU, and the carried
+state h at chunk boundaries is exactly the decode state.
+
+Decode: single-step recurrence with (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.sharding import EMBED, INNER
+from repro.models.layers import trunc_normal
+
+Params = Any
+
+
+def init_mamba(key, cfg: ModelConfig) -> Tuple[Params, Any]:
+    d, din = cfg.d_model, cfg.mamba_d_inner
+    n, r, dc = cfg.mamba_d_state, cfg.dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation of A
+    a_log = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32)[None], (din, n)))
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[4], (din,)) *
+                 (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))   # inverse softplus
+    params = {
+        "in_proj": trunc_normal(ks[0], (d, 2 * din)),
+        "conv_w": trunc_normal(ks[1], (dc, din), stddev=0.1),
+        "conv_b": jnp.zeros((din,)),
+        "x_proj": trunc_normal(ks[2], (din, r + 2 * n)),
+        "dt_proj": trunc_normal(ks[3], (r, din), stddev=r ** -0.5),
+        "dt_bias": dt_bias,
+        "a_log": a_log,
+        "d_skip": jnp.ones((din,)),
+        "out_proj": trunc_normal(
+            ks[5], (din, d), stddev=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    specs = {
+        "in_proj": (EMBED, INNER),
+        "conv_w": (None, INNER),
+        "conv_b": (INNER,),
+        "x_proj": (INNER, None),
+        "dt_proj": (None, INNER),
+        "dt_bias": (INNER,),
+        "a_log": (INNER, None),
+        "d_skip": (INNER,),
+        "out_proj": (INNER, EMBED),
+    }
+    return params, specs
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv along time.  x: (B,S,din); w: (dc,din).
+
+    Returns (y, new_state) where state caches the last dc-1 inputs.
+    """
+    dc = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    s = x.shape[1]
+    y = sum(x_pad[:, k:k + s, :] * w[k][None, None] for k in range(dc))
+    new_state = x_pad[:, -(dc - 1):, :] if dc > 1 else None
+    return y + b[None, None], new_state
+
+
+def _ssm_chunked(a_coef, bx, h0, chunk: int):
+    """h_t = a_t * h_{t-1} + bx_t via chunked associative scan.
+
+    a_coef, bx: (B, S, din, N) fp32.  h0: (B, din, N).
+    Returns (ys (B,S,din,N), h_final).
+    """
+    b, s, din, n = a_coef.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    a_c = a_coef.reshape(b, nc, chunk, din, n).transpose(1, 0, 2, 3, 4)
+    bx_c = bx.reshape(b, nc, chunk, din, n).transpose(1, 0, 2, 3, 4)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, bl * ar + br
+
+    def step(h, inp):
+        a_i, bx_i = inp  # (B, chunk, din, N)
+        acc_a, acc_b = jax.lax.associative_scan(combine, (a_i, bx_i), axis=1)
+        ys = acc_a * h[:, None] + acc_b
+        return ys[:, -1], ys
+
+    with jax.named_scope("mamba_ssm_kernel"):
+        h_final, ys = jax.lax.scan(step, h0, (a_c, bx_c))
+    ys = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, din, n)
+    return ys, h_final
+
+
+def _ssm_sequential(a_coef, bx, h0):
+    """Oracle: plain sequential scan over time (tests/test_mamba.py)."""
+    def step(h, inp):
+        a_t, bx_t = inp
+        h = a_t * h + bx_t
+        return h, h
+    a_t = jnp.moveaxis(a_coef, 1, 0)
+    bx_t = jnp.moveaxis(bx, 1, 0)
+    h_final, ys = jax.lax.scan(step, h0, (a_t, bx_t))
+    return jnp.moveaxis(ys, 0, 1), h_final
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    din, n, dc = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {
+        "conv": jnp.zeros((batch, dc - 1, din), dtype),
+        "ssm": jnp.zeros((batch, din, n), jnp.float32),
+    }
+
+
+def apply_mamba(params: Params, x: jax.Array, cfg: ModelConfig,
+                policy: Policy, *, state: Optional[dict] = None,
+                return_state: bool = False, chunk: int = 128,
+                use_chunked: bool = True):
+    """x: (B, S, d).  Returns (y, new_state_or_None)."""
+    b, s, d = x.shape
+    din, n, r = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
+    cd = policy.compute_dtype
+
+    xz = x.astype(cd) @ params["in_proj"].astype(cd)
+    x1, z = jnp.split(xz, 2, axis=-1)
+
+    conv_state = state["conv"] if state is not None else None
+    x1, new_conv = _causal_conv(
+        x1, params["conv_w"].astype(cd), params["conv_b"].astype(cd),
+        conv_state)
+    x1 = jax.nn.silu(x1)
+
+    dbc = x1 @ params["x_proj"].astype(cd)
+    dt, b_in, c_in = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = dt @ params["dt_proj"].astype(cd) + params["dt_bias"].astype(cd)
+    # recurrence in fp32 (AMP "numerically unsafe" category, paper §4.2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32))            # (B,S,din)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))       # (din,N)
+    a_coef = jnp.exp(dt[..., None] * a[None, None])         # (B,S,din,N)
+    bx = (dt * x1.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, :, None, :]             # (B,S,din,N)
+
+    h0 = state["ssm"] if state is not None else jnp.zeros((b, din, n))
+    if s == 1:
+        # decode fast path: one recurrence step, no scan machinery
+        h = a_coef[:, 0] * h0 + bx[:, 0]
+        ys = h[:, None]
+        h_final = h
+    elif use_chunked:
+        ys, h_final = _ssm_chunked(a_coef, bx, h0, chunk)
+    else:
+        ys, h_final = _ssm_sequential(a_coef, bx, h0)
+
+    y = jnp.einsum("bsdn,bsn->bsd", ys, c_in.astype(jnp.float32))
+    y = y + params["d_skip"].astype(jnp.float32) * x1.astype(jnp.float32)
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(cd)
+
+    new_state = None
+    if return_state:
+        new_state = {"conv": new_conv.astype(jnp.float32)
+                     if new_conv is not None else state["conv"],
+                     "ssm": h_final}
+    return out, new_state

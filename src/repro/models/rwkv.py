@@ -1,0 +1,254 @@
+"""RWKV-6 "Finch" time-mix + channel-mix (attention-free, data-dependent decay).
+
+[arXiv:2404.05892]  The WKV6 recurrence per head (head_size hs):
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t          (S: hs x hs state)
+    o_t   = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+with per-channel, per-token decay w_t = exp(-exp(decay(x_t))) in (0, 1).
+
+TPU adaptation: the CUDA WKV kernel becomes a *chunk-parallel* formulation
+(flash-linear-attention style).  Within a chunk of length L, with cumulative
+log-decay c_i = sum_{j<=i} log w_j (c <= 0):
+
+    intra:  o_i += sum_{j<i} [ sum_c r_i[c] k_j[c] e^{c_i[c]-c_j[c]} ] v_j
+            + (r_i . (u * k_i)) v_i
+    cross:  o_i += (r_i * e^{c_i}) S_prev
+    state:  S_new = diag(e^{c_L}) S_prev + sum_j (k_j * e^{c_L-c_j})^T v_j
+
+Every exponent is a *difference of cumulative decays in the right order*
+(c_i - c_j with j <= i), hence <= 0: fp32-safe with no loss scaling tricks,
+unlike the q*e^{c} / k*e^{-c} factorisation.  The recurrence runs in fp32
+(the paper's §4.2 "numerically unsafe op" category).
+
+Decode: exact single-step recurrence on (shift, state) carried per layer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.sharding import EMBED, FF, HEADS
+from repro.models.layers import trunc_normal
+
+Params = Any
+LORA = 32   # low-rank size of the data-dependent mix/decay projections
+
+
+def init_time_mix(key, cfg: ModelConfig) -> Tuple[Params, Any]:
+    d = cfg.d_model
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    ks = jax.random.split(key, 12)
+    params = {
+        # data-dependent token-shift interpolation (ddlerp)
+        "maa_x": jnp.zeros((d,)),
+        "maa_wkvrg": jnp.zeros((5, d)),
+        "maa_w1": trunc_normal(ks[0], (d, 5 * LORA), stddev=1e-4),
+        "maa_w2": trunc_normal(ks[1], (5, LORA, d), stddev=1e-4),
+        # data-dependent decay
+        "decay": jnp.full((d,), -6.0),
+        "decay_w1": trunc_normal(ks[2], (d, 64), stddev=1e-4),
+        "decay_w2": trunc_normal(ks[3], (64, d), stddev=1e-4),
+        # bonus for current token
+        "u": trunc_normal(ks[4], (h, hs), stddev=0.5),
+        "wr": trunc_normal(ks[5], (d, d)),
+        "wk": trunc_normal(ks[6], (d, d)),
+        "wv": trunc_normal(ks[7], (d, d)),
+        "wg": trunc_normal(ks[8], (d, d)),
+        "wo": trunc_normal(ks[9], (d, d),
+                           stddev=0.02 / math.sqrt(2 * cfg.n_layers)),
+        "ln_x_scale": jnp.ones((d,)),
+        "ln_x_bias": jnp.zeros((d,)),
+    }
+    specs = {
+        "maa_x": (EMBED,), "maa_wkvrg": (None, EMBED),
+        "maa_w1": (EMBED, None), "maa_w2": (None, None, EMBED),
+        "decay": (EMBED,), "decay_w1": (EMBED, None), "decay_w2": (None, EMBED),
+        "u": (HEADS, None),
+        "wr": (EMBED, HEADS), "wk": (EMBED, HEADS), "wv": (EMBED, HEADS),
+        "wg": (EMBED, HEADS), "wo": (HEADS, EMBED),
+        "ln_x_scale": (EMBED,), "ln_x_bias": (EMBED,),
+    }
+    return params, specs
+
+
+def init_channel_mix(key, cfg: ModelConfig) -> Tuple[Params, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    params = {
+        "maa_k": jnp.zeros((d,)),
+        "maa_r": jnp.zeros((d,)),
+        "wk": trunc_normal(ks[0], (d, f)),
+        "wr": trunc_normal(ks[1], (d, d)),
+        "wv": trunc_normal(ks[2], (f, d),
+                           stddev=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    specs = {"maa_k": (EMBED,), "maa_r": (EMBED,),
+             "wk": (EMBED, FF), "wr": (EMBED, HEADS), "wv": (FF, EMBED)}
+    return params, specs
+
+
+def _token_shift(x: jax.Array, last: Optional[jax.Array]):
+    """Returns (x_{t-1}, new_last).  last: (B, 1, d) from previous step."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = 64):
+    """Chunk-parallel WKV6.  r,k,v: (B,S,H,hs); logw: (B,S,H,hs) (<=0);
+    u: (H,hs); s0: (B,H,hs,hs).  Returns (o (B,S,H,hs), s_final).  fp32."""
+    b, s, h, hs = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    f32 = jnp.float32
+    r, k, v, logw = (t.astype(f32) for t in (r, k, v, logw))
+    rc = r.reshape(b, nc, chunk, h, hs).transpose(1, 0, 3, 2, 4)  # (nc,B,H,L,hs)
+    kc = k.reshape(b, nc, chunk, h, hs).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, chunk, h, hs).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(b, nc, chunk, h, hs).transpose(1, 0, 3, 2, 4)
+
+    tri_lt = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # j < i
+
+    def step(s_prev, inp):
+        ri, ki, vi, wi = inp         # (B,H,L,hs)
+        c = jnp.cumsum(wi, axis=2)   # cumulative log decay, c_i <= 0*
+        c_prev = c - wi              # exclusive cumsum (c_{i-1})
+        # intra-chunk scores: A[i,j] = sum_c r_i k_j e^{c_{i-1} - c_j}, j < i
+        # (decay spans (j, i-1]: w_i does NOT touch k_j v_j seen at step i).
+        # exponent <= 0 for j <= i-1 -> fp32-safe.
+        diff = c_prev[:, :, :, None, :] - c[:, :, None, :, :]  # (B,H,L,L,hs)
+        diff = jnp.where(tri_lt[None, None, :, :, None], diff, -jnp.inf)
+        scores = jnp.einsum("bhic,bhijc,bhjc->bhij",
+                            ri, jnp.exp(diff), ki)
+        o = jnp.einsum("bhij,bhjc->bhic", scores, vi)
+        # current-token bonus: (r_i . (u * k_i)) v_i
+        bonus = jnp.einsum("bhic,hc,bhic->bhi", ri, u.astype(f32), ki)
+        o = o + bonus[..., None] * vi
+        # cross-chunk: o_i += (r_i * e^{c_{i-1}}) S_prev ; decay up to i-1
+        o = o + jnp.einsum("bhic,bhcv->bhiv", ri * jnp.exp(c_prev), s_prev)
+        # state update: S = diag(e^{c_L}) S_prev + sum_j (k_j e^{c_L - c_j})^T v_j
+        c_last = c[:, :, -1:, :]     # (B,H,1,hs)
+        k_eff = ki * jnp.exp(c_last - c)
+        s_new = jnp.exp(c_last[:, :, 0, :, None]) * s_prev + \
+            jnp.einsum("bhjc,bhjv->bhcv", k_eff, vi)
+        return s_new, o
+
+    with jax.named_scope("wkv6_kernel"):
+        s_final, oc = jax.lax.scan(step, s0.astype(f32), (rc, kc, vc, wc))
+    o = oc.transpose(1, 0, 3, 2, 4).reshape(b, s, h, hs)
+    return o, s_final
+
+
+def wkv6_sequential(r, k, v, logw, u, s0):
+    """Oracle: step-by-step WKV6 recurrence (tests/test_rwkv.py)."""
+    f32 = jnp.float32
+    r, k, v, logw = (jnp.moveaxis(t.astype(f32), 1, 0)
+                     for t in (r, k, v, logw))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp         # (B,H,hs)
+        kv = jnp.einsum("bhc,bhv->bhcv", kt, vt)
+        o = jnp.einsum("bhc,bhcv->bhv", rt,
+                       s + u.astype(f32)[None, :, :, None] * kv)
+        s = jnp.exp(wt)[..., None] * s + kv
+        return s, o
+
+    s_final, o = jax.lax.scan(step, s0.astype(f32), (r, k, v, logw))
+    return jnp.moveaxis(o, 0, 1), s_final
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    d = cfg.d_model
+    return {
+        "tm_shift": jnp.zeros((batch, 1, d), jnp.float32),
+        "cm_shift": jnp.zeros((batch, 1, d), jnp.float32),
+        "wkv": jnp.zeros((batch, h, hs, hs), jnp.float32),
+    }
+
+
+def apply_time_mix(params: Params, x: jax.Array, cfg: ModelConfig,
+                   policy: Policy, *, state: Optional[dict] = None,
+                   return_state: bool = False, chunk: int = 64):
+    b, s, d = x.shape
+    h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+    cd = policy.compute_dtype
+    xc = x.astype(cd)
+
+    prev = state["tm_shift"] if state is not None else None
+    shifted, new_shift = _token_shift(xc, prev)
+    xx = shifted - xc
+    # ddlerp: data-dependent interpolation weights via LoRA
+    xxx = xc + xx * params["maa_x"].astype(cd)
+    lora = jnp.tanh(xxx @ params["maa_w1"].astype(cd))
+    lora = lora.reshape(b, s, 5, LORA).transpose(2, 0, 1, 3)
+    deltas = jnp.einsum("nbsl,nld->nbsd", lora, params["maa_w2"].astype(cd))
+    mix = params["maa_wkvrg"].astype(cd)[:, None, None] + deltas  # (5,B,S,d)
+    xw, xk, xv, xr, xg = (xc + xx * mix[i] for i in range(5))
+
+    r = (xr @ params["wr"].astype(cd)).reshape(b, s, h, hs)
+    k = (xk @ params["wk"].astype(cd)).reshape(b, s, h, hs)
+    v = (xv @ params["wv"].astype(cd)).reshape(b, s, h, hs)
+    g = xg @ params["wg"].astype(cd)
+
+    # data-dependent decay (fp32): logw = -exp(decay + lora(xw)) <= 0
+    dd = jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"].astype(jnp.float32))
+    dd = dd @ params["decay_w2"].astype(jnp.float32)
+    logw = -jnp.exp(params["decay"].astype(jnp.float32)[None, None] + dd)
+    logw = logw.reshape(b, s, h, hs)
+
+    s0 = state["wkv"] if state is not None else jnp.zeros((b, h, hs, hs))
+    if s == 1:
+        o, s_final = wkv6_sequential(r, k, v, logw, params["u"], s0)
+    else:
+        # dispatch to the Pallas wkv6 kernel on TPU (same backend selector
+        # as attention; jnp chunks are the oracle elsewhere)
+        from repro.models.layers import attention_impl
+        impl = attention_impl()
+        if impl != "jnp" and s % min(chunk, s) == 0:
+            from repro.kernels import ops as kops
+            o, s_final = kops.wkv6(r, k, v, logw, params["u"], s0,
+                                   chunk=chunk, impl=impl)
+        else:
+            o, s_final = wkv6_chunked(r, k, v, logw, params["u"], s0, chunk)
+
+    # per-head group norm, then gate
+    of = o.reshape(b, s, h, hs)
+    mean = of.mean(-1, keepdims=True)
+    var = of.var(-1, keepdims=True)
+    of = (of - mean) * jax.lax.rsqrt(var + 64e-5)
+    of = of.reshape(b, s, d) * params["ln_x_scale"].astype(jnp.float32) + \
+        params["ln_x_bias"].astype(jnp.float32)
+    y = (of.astype(cd) * jax.nn.silu(g)) @ params["wo"].astype(cd)
+
+    new_state = None
+    if return_state:
+        new_state = {"tm_shift": new_shift.astype(jnp.float32),
+                     "wkv": s_final}
+    return y, new_state
+
+
+def apply_channel_mix(params: Params, x: jax.Array, cfg: ModelConfig,
+                      policy: Policy, *, state: Optional[dict] = None,
+                      return_state: bool = False):
+    cd = policy.compute_dtype
+    xc = x.astype(cd)
+    prev = state["cm_shift"] if state is not None else None
+    shifted, new_shift = _token_shift(xc, prev)
+    xx = shifted - xc
+    xk = xc + xx * params["maa_k"].astype(cd)
+    xr = xc + xx * params["maa_r"].astype(cd)
+    kk = jnp.square(jax.nn.relu(xk @ params["wk"].astype(cd)))
+    y = jax.nn.sigmoid(xr @ params["wr"].astype(cd)) * \
+        (kk @ params["wv"].astype(cd))
+    new_state = {"cm_shift": new_shift.astype(jnp.float32)} \
+        if return_state else None
+    return y, new_state

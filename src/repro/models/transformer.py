@@ -1,0 +1,416 @@
+"""Composable transformer assembly: decoder-only, encoder-only, encoder-decoder.
+
+Blocks are stacked (params' leading dim = n_blocks) and applied with
+``lax.scan`` so the lowered HLO contains ONE block body regardless of depth
+-- essential for compiling 62-72 layer configs in the multi-pod dry-run.
+Heterogeneous patterns (jamba's 1 attn + 7 mamba, gemma2's local/global
+alternation) live *inside* the scanned block: ``cfg.block_pattern`` position
+``i`` has its own stacked param dict.
+
+Decode state is a pytree mirroring the block structure; attention KV caches
+support ring-buffer semantics so sliding-window layers allocate only
+``window`` slots (gemma2 long_500k).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.sharding import EMBED, VOCAB, lshard
+from repro.models import layers as L
+from repro.models import mamba as MB
+from repro.models import moe as MOE
+from repro.models import rwkv as RW
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, mixer: str, mlp: str,
+                cross: bool = False):
+    ks = jax.random.split(key, 8)
+    params, specs = {}, {}
+
+    def add(name, pair):
+        params[name], specs[name] = pair
+
+    add("norm1", L.init_norm(cfg))
+    if mixer.startswith("attn"):
+        add("mixer", L.init_attention(ks[0], cfg))
+    elif mixer == "mamba":
+        add("mixer", MB.init_mamba(ks[0], cfg))
+    elif mixer == "rwkv":
+        add("mixer", RW.init_time_mix(ks[0], cfg))
+    else:
+        raise ValueError(mixer)
+    if cfg.post_block_norm:
+        add("postnorm1", L.init_norm(cfg))
+    if cross:
+        add("norm_cross", L.init_norm(cfg))
+        add("cross", L.init_attention(ks[1], cfg, cross=True))
+    add("norm2", L.init_norm(cfg))
+    if mlp == "dense":
+        add("mlp", L.init_mlp(ks[2], cfg))
+    elif mlp == "moe":
+        add("mlp", MOE.init_moe(ks[2], cfg))
+    elif mlp == "rwkv_cm":
+        add("mlp", RW.init_channel_mix(ks[2], cfg))
+    else:
+        raise ValueError(mlp)
+    if cfg.post_block_norm:
+        add("postnorm2", L.init_norm(cfg))
+    return params, specs
+
+
+def _init_layer_state(cfg: ModelConfig, mixer: str, mlp: str, batch: int,
+                      cache_len: int, cache_dtype, cross_len: int = 0):
+    st = {}
+    if mixer.startswith("attn"):
+        eff_len = cache_len
+        if mixer == "attn_local" and cfg.sliding_window:
+            eff_len = min(cache_len, cfg.sliding_window)
+        st["cache"] = L.init_attention_cache(cfg, batch, eff_len, cache_dtype)
+        if cross_len:
+            st["cross"] = L.init_attention_cache(cfg, batch, cross_len,
+                                                 cache_dtype)
+    elif mixer == "mamba":
+        st.update(MB.init_mamba_state(cfg, batch))
+    elif mixer == "rwkv":
+        s = RW.init_rwkv_state(cfg, batch)
+        st["tm_shift"], st["wkv"] = s["tm_shift"], s["wkv"]
+    if mlp == "rwkv_cm":
+        st["cm_shift"] = jnp.zeros((batch, 1, cfg.d_model), jnp.float32)
+    return st
+
+
+# ---------------------------------------------------------------------------
+# Per-layer apply (used by both the train path and the decode path)
+# ---------------------------------------------------------------------------
+
+def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
+                 mlp: str, *, positions=None, enc_out=None, state=None,
+                 decode_pos=None, return_state: bool = False,
+                 moe_impl: str = "a2a"):
+    new_state = {} if return_state else None
+    aux = jnp.float32(0.0)
+
+    def maybe_postnorm(y, which):
+        if cfg.post_block_norm:
+            return L.apply_norm(p[which], y, cfg, policy)
+        return y
+
+    # --- mixer ---
+    h = L.apply_norm(p["norm1"], x, cfg, policy)
+    if mixer.startswith("attn"):
+        cache = state.get("cache") if state is not None else None
+        if cache is not None and decode_pos is not None:
+            cache_len = cache["k"].shape[1]
+            write_pos = jnp.mod(decode_pos, cache_len)
+            kv_len = jnp.minimum(decode_pos + 1, cache_len)
+            y, nc = L.apply_attention(
+                p["mixer"], h, cfg, policy, mixer_kind="attn",
+                positions=_decode_positions(positions, decode_pos, h.shape[0],
+                                            cfg),
+                cache=cache, cache_pos=write_pos, kv_len=kv_len,
+                return_cache=return_state)
+            # ring buffers hold only valid slots; kv_len mask applied inside
+            if return_state:
+                new_state["cache"] = nc
+        else:
+            y, nc = L.apply_attention(
+                p["mixer"], h, cfg, policy, mixer_kind=mixer,
+                positions=positions, return_cache=return_state)
+            if return_state:
+                cache_len = state["cache"]["k"].shape[1] if state else None
+                new_state["cache"] = _fit_cache(nc, state, cfg)
+    elif mixer == "mamba":
+        mst = ({"conv": state["conv"], "ssm": state["ssm"]}
+               if state is not None and "conv" in state else None)
+        y, ns = MB.apply_mamba(p["mixer"], h, cfg, policy, state=mst,
+                               return_state=return_state)
+        if return_state:
+            new_state.update(ns)
+    elif mixer == "rwkv":
+        rst = ({"tm_shift": state["tm_shift"], "wkv": state["wkv"]}
+               if state is not None and "wkv" in state else None)
+        y, ns = RW.apply_time_mix(p["mixer"], h, cfg, policy, state=rst,
+                                  return_state=return_state)
+        if return_state:
+            new_state.update(ns)
+    else:
+        raise ValueError(mixer)
+    x = x + maybe_postnorm(y, "postnorm1").astype(x.dtype)
+
+    # --- cross attention (encoder-decoder) ---
+    if "cross" in p:
+        h = L.apply_norm(p["norm_cross"], x, cfg, policy)
+        ccache = state.get("cross") if state is not None else None
+        y, nc = L.apply_attention(p["cross"], h, cfg, policy,
+                                  kv_source=enc_out, cache=ccache,
+                                  static_kv=True, return_cache=return_state)
+        if return_state:
+            # cross kv is static after prefill
+            new_state["cross"] = nc if nc is not None else ccache
+        x = x + y.astype(x.dtype)
+
+    # --- mlp ---
+    h = L.apply_norm(p["norm2"], x, cfg, policy)
+    if mlp == "dense":
+        y = L.apply_mlp(p["mlp"], h, cfg, policy)
+    elif mlp == "moe":
+        y, aux = MOE.moe_apply(p["mlp"], h, cfg, policy, impl=moe_impl)
+    elif mlp == "rwkv_cm":
+        cst = ({"cm_shift": state["cm_shift"]}
+               if state is not None and "cm_shift" in state else None)
+        y, ns = RW.apply_channel_mix(p["mlp"], h, cfg, policy, state=cst,
+                                     return_state=return_state)
+        if return_state and ns is not None:
+            new_state.update(ns)
+    x = x + maybe_postnorm(y, "postnorm2").astype(x.dtype)
+    return x, new_state, aux
+
+
+def _decode_positions(positions, decode_pos, batch, cfg: ModelConfig):
+    if positions is not None:
+        return positions
+    if cfg.pos_kind == "mrope":
+        p = jnp.broadcast_to(decode_pos, (3, batch, 1)).astype(jnp.int32)
+        return p
+    return jnp.broadcast_to(decode_pos, (batch, 1)).astype(jnp.int32)
+
+
+def _fit_cache(new_cache, state, cfg):
+    """Prefill wrote a seq-length cache; pad/copy into the allocated slots."""
+    if new_cache is None or state is None or "cache" not in state:
+        return new_cache
+    tgt = state["cache"]["k"].shape[1]
+    out = {}
+    for key in ("k", "v"):
+        cur = new_cache[key]
+        s = cur.shape[1]
+        if s == tgt:
+            out[key] = cur
+        elif s < tgt:
+            pad = [(0, 0)] * cur.ndim
+            pad[1] = (0, tgt - s)
+            out[key] = jnp.pad(cur, pad)
+        else:
+            # ring buffer: keep the last `tgt` positions, rolled so absolute
+            # position p sits at ring index p % tgt (decode writes there)
+            kept = cur[:, -tgt:]
+            out[key] = jnp.roll(kept, shift=s % tgt, axis=1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ModelConfig):
+    """Returns (params, specs) with blocks stacked over n_blocks."""
+    ks = jax.random.split(key, 8)
+    params, specs = {}, {}
+    params["embed"], specs["embed"] = L.init_embedding(ks[0], cfg)
+
+    cross = cfg.is_encoder_decoder
+
+    def stack_layers(key, n, pattern, cross):
+        out_p, out_s = [], []
+        for i, (mixer, mlp) in enumerate(pattern):
+            def init_one(k, mixer=mixer, mlp=mlp):
+                p, _ = _init_layer(k, cfg, mixer, mlp, cross)
+                return p
+            keys = jax.random.split(jax.random.fold_in(key, i), n)
+            stacked = jax.vmap(init_one)(keys)
+            _, s = _init_layer(jax.random.PRNGKey(0), cfg, mixer, mlp, cross)
+            s = jax.tree_util.tree_map(
+                lambda spec: (None,) + tuple(spec), s,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+            out_p.append(stacked)
+            out_s.append(s)
+        return tuple(out_p), tuple(out_s)
+
+    params["blocks"], specs["blocks"] = stack_layers(
+        ks[1], cfg.n_blocks, cfg.block_pattern, cross)
+    params["final_norm"], specs["final_norm"] = L.init_norm(cfg)
+
+    if cfg.is_encoder_decoder:
+        n_enc_blocks = cfg.n_enc_layers // len(cfg.enc_block_pattern)
+        params["enc_blocks"], specs["enc_blocks"] = stack_layers(
+            ks[2], n_enc_blocks, cfg.enc_block_pattern, False)
+        params["enc_norm"], specs["enc_norm"] = L.init_norm(cfg)
+        params["enc_pos"] = L.trunc_normal(ks[3], (cfg.enc_seq, cfg.d_model))
+        specs["enc_pos"] = (None, EMBED)
+
+    if not cfg.tie_embeddings and not cfg.is_encoder_only:
+        params["lm_head"] = L.trunc_normal(ks[4], (cfg.d_model, cfg.vocab_size))
+        specs["lm_head"] = (EMBED, VOCAB)
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _run_blocks(params_blocks, x, cfg: ModelConfig, policy: Policy, pattern,
+                *, positions=None, enc_out=None, states=None,
+                decode_pos=None, return_states: bool = False,
+                moe_impl: str = "a2a", remat: bool = False):
+    """Scan over stacked blocks.  states mirrors params_blocks structure."""
+    npos = len(pattern)
+
+    def block_body(carry, xs):
+        x, aux_acc = carry
+        if return_states:
+            bp, bs = xs
+        else:
+            bp, bs = xs, (None,) * npos
+        new_states = []
+        for i, (mixer, mlp) in enumerate(pattern):
+            st = bs[i] if bs[i] is not None else None
+            x, ns, aux = _apply_layer(
+                bp[i], x, cfg, policy, mixer, mlp, positions=positions,
+                enc_out=enc_out, state=st, decode_pos=decode_pos,
+                return_state=return_states, moe_impl=moe_impl)
+            new_states.append(ns)
+        out = tuple(new_states) if return_states else None
+        return (x, aux_acc + aux), out
+
+    body = jax.checkpoint(block_body) if remat else block_body
+    xs = (params_blocks, states) if return_states else params_blocks
+    (x, aux), out_states = jax.lax.scan(body, (x, jnp.float32(0.0)), xs)
+    return x, aux, out_states
+
+
+def apply_lm(params, tokens, cfg: ModelConfig, policy: Policy, *,
+             positions=None, vision_embeds=None, enc_frames=None,
+             moe_impl: str = "a2a", remat: bool = False,
+             logits_slice_last: bool = False):
+    """Full forward -> logits.  Used for training and prefill scoring.
+
+    tokens: (B, S) int32.  vision_embeds: (B, Nv, d) stub patch embeddings
+    overwriting the first Nv positions (qwen2-vl).  enc_frames: (B, Se, d)
+    stub audio frame embeddings (whisper).
+    """
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+    if vision_embeds is not None and cfg.n_vision_tokens:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate(
+            [vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        assert enc_frames is not None
+        e = enc_frames.astype(policy.compute_dtype) + \
+            params["enc_pos"].astype(policy.compute_dtype)[None]
+        e, _, _ = _run_blocks(params["enc_blocks"], e, cfg, policy,
+                              cfg.enc_block_pattern, remat=remat)
+        enc_out = L.apply_norm(params["enc_norm"], e, cfg, policy)
+
+    if positions is None and cfg.pos_kind == "mrope":
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+
+    x, aux, _ = _run_blocks(params["blocks"], x, cfg, policy,
+                            cfg.block_pattern, positions=positions,
+                            enc_out=enc_out, moe_impl=moe_impl, remat=remat)
+    x = L.apply_norm(params["final_norm"], x, cfg, policy)
+    if logits_slice_last:
+        x = x[:, -1:]
+    logits = _lm_logits(params, x, cfg, policy)
+    return logits, aux
+
+
+def _lm_logits(params, x, cfg: ModelConfig, policy: Policy):
+    head = params.get("lm_head")
+    if head is None:
+        head = params["embed"]["tok"].T
+    logits = x.astype(policy.compute_dtype) @ head.astype(policy.compute_dtype)
+    if cfg.final_logit_softcap:
+        logits = L._soft_cap(logits.astype(policy.reduce_dtype),
+                             cfg.final_logit_softcap)
+    logits = lshard(logits, "batch", None, "vocab")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16, enc_len: int = 0):
+    """Stacked per-block decode state (pytree of leading-dim n_blocks)."""
+    def one_pos(mixer, mlp):
+        st = _init_layer_state(cfg, mixer, mlp, batch, max_len, cache_dtype,
+                               cross_len=enc_len)
+        return st
+
+    blocks = []
+    for mixer, mlp in cfg.block_pattern:
+        st = one_pos(mixer, mlp)
+        st = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_blocks,) + x.shape),
+            st)
+        blocks.append(st)
+    return {"pos": jnp.int32(0), "blocks": tuple(blocks)}
+
+
+def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
+            state, positions=None, vision_embeds=None, enc_frames=None,
+            moe_impl: str = "a2a"):
+    """Run the prompt through the model, filling ``state``.
+
+    Returns (last_token_logits (B, V), new_state).
+    """
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy)
+    if vision_embeds is not None and cfg.n_vision_tokens:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        e = enc_frames.astype(policy.compute_dtype) + \
+            params["enc_pos"].astype(policy.compute_dtype)[None]
+        e, _, _ = _run_blocks(params["enc_blocks"], e, cfg, policy,
+                              cfg.enc_block_pattern)
+        enc_out = L.apply_norm(params["enc_norm"], e, cfg, policy)
+
+    if positions is None and cfg.pos_kind == "mrope":
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+
+    x, aux, new_block_states = _run_blocks(
+        params["blocks"], x, cfg, policy, cfg.block_pattern,
+        positions=positions, enc_out=enc_out, states=state["blocks"],
+        return_states=True, moe_impl=moe_impl)
+    x = L.apply_norm(params["final_norm"], x[:, -1:], cfg, policy)
+    logits = _lm_logits(params, x, cfg, policy)[:, 0]
+    return logits, {"pos": jnp.int32(tokens.shape[1]),
+                    "blocks": new_block_states}
+
+
+def decode_step(params, token, state, cfg: ModelConfig, policy: Policy, *,
+                moe_impl: str = "replicated"):
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B,V), state)."""
+    pos = state["pos"]
+    x = L.embed_tokens(params["embed"], token, cfg, policy, pos_offset=pos)
+    enc_out = None  # cross-attn uses the cached cross KV
+
+    x, aux, new_block_states = _run_blocks(
+        params["blocks"], x, cfg, policy, cfg.block_pattern,
+        states=state["blocks"], decode_pos=pos, return_states=True,
+        moe_impl=moe_impl)
+    x = L.apply_norm(params["final_norm"], x, cfg, policy)
+    logits = _lm_logits(params, x, cfg, policy)[:, 0]
+    return logits, {"pos": pos + 1, "blocks": new_block_states}

@@ -1,0 +1,3 @@
+from repro.optim.lamb import LambState, lamb_init, lamb_update
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import warmup_poly_decay

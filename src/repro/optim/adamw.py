@@ -1,0 +1,40 @@
+"""AdamW baseline optimizer (same state layout as LAMB, trust ratio = 1)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.lamb import LambState
+
+
+def adamw_init(params) -> LambState:
+    from repro.optim.lamb import lamb_init
+    return lamb_init(params)
+
+
+def adamw_update(grads, state: LambState, *, lr, b1: float = 0.9,
+                 b2: float = 0.999, eps: float = 1e-8, wd: float = 0.01,
+                 skip_update: Optional[jax.Array] = None) -> LambState:
+    step = state.step + 1
+    lr = jnp.asarray(lr, jnp.float32)
+
+    def leaf(w, g, m, v):
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m2 / (1 - b1 ** step)
+        vhat = v2 / (1 - b2 ** step)
+        return w - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * w), m2, v2
+
+    new = jax.tree_util.tree_map(leaf, state.master, grads, state.m, state.v)
+    outer = jax.tree_util.tree_structure(state.master)
+    inner = jax.tree_util.tree_structure((0, 0, 0))
+    new_w, new_m, new_v = jax.tree_util.tree_transpose(outer, inner, new)
+    if skip_update is not None:
+        keep = lambda new_t, old_t: jax.tree_util.tree_map(
+            lambda n, o: jnp.where(skip_update, o, n), new_t, old_t)
+        new_w, new_m, new_v = (keep(new_w, state.master), keep(new_m, state.m),
+                               keep(new_v, state.v))
+        step = jnp.where(skip_update, state.step, step)
+    return LambState(step, new_w, new_m, new_v)

@@ -1,0 +1,15 @@
+"""LR schedules.  BERT pretraining uses linear warmup + poly decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_poly_decay(step, *, base_lr: float, warmup_steps: int,
+                      total_steps: int, power: float = 1.0,
+                      end_lr: float = 0.0):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+    frac = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    decay = (base_lr - end_lr) * (1.0 - frac) ** power + end_lr
+    return jnp.where(step < warmup_steps, warm, decay)

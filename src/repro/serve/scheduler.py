@@ -1,0 +1,134 @@
+"""Batched request scheduling for serving.
+
+Cohort scheduler: requests queue; the engine takes up to ``batch`` prompts,
+left-pads them to a common prefill length, prefetches the KV state once and
+decodes the whole cohort until every request hits EOS / its token budget.
+Per-request completion is tracked (finished slots keep decoding but their
+outputs are discarded), and utilisation is reported so the cost of cohort
+vs continuous batching is visible.  Continuous per-slot refill needs
+per-slot cache positions and is left as the next serving milestone
+(documented; the cache layout in models/transformer.py already isolates
+slots along the batch axis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int = 32
+    output: Optional[np.ndarray] = None
+    latency_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServeStats:
+    cohorts: int = 0
+    decode_steps: int = 0
+    useful_tokens: int = 0
+    wasted_slots: int = 0        # decode slots spent on finished requests
+    wall_s: float = 0.0
+
+    @property
+    def slot_utilisation(self) -> float:
+        total = self.useful_tokens + self.wasted_slots
+        return self.useful_tokens / total if total else 1.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.useful_tokens / self.wall_s if self.wall_s else 0.0
+
+
+class CohortScheduler:
+    def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
+                 batch: int, max_len: int, eos_id: int = -1,
+                 pad_id: int = 0, moe_impl: str = "dense"):
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.batch, self.max_len = batch, max_len
+        self.eos_id, self.pad_id = eos_id, pad_id
+        self.moe_impl = moe_impl
+        self.queue: List[Request] = []
+        self.stats = ServeStats()
+        self._decode = jax.jit(
+            lambda p, t, s: T.decode_step(p, t, s, cfg, policy,
+                                          moe_impl=moe_impl))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pad_prompts(self, reqs: List[Request]):
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.full((len(reqs), plen), self.pad_id, np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        return jnp.asarray(toks), plen
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        t0 = time.perf_counter()
+        while self.queue:
+            cohort = self.queue[: self.batch]
+            self.queue = self.queue[self.batch:]
+            self._run_cohort(cohort)
+            done.extend(cohort)
+            self.stats.cohorts += 1
+        self.stats.wall_s += time.perf_counter() - t0
+        return done
+
+    def _run_cohort(self, real: List[Request]):
+        t0 = time.perf_counter()
+        # pad the cohort to the engine batch with dummy slots (local copy:
+        # dummies must not leak into the caller's done-list)
+        cohort = list(real)
+        while len(cohort) < self.batch:
+            cohort.append(Request(rid=-1, prompt=cohort[0].prompt,
+                                  max_new_tokens=0))
+        toks, plen = self._pad_prompts(cohort)
+        state = T.init_decode_state(
+            self.cfg, self.batch, self.max_len,
+            enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0)
+        logits, state = T.prefill(self.params, toks, self.cfg, self.policy,
+                                  state=state, moe_impl=self.moe_impl)
+        tok = jnp.argmax(logits, -1)[:, None]
+        budget = max(r.max_new_tokens for r in cohort)
+        outs = [np.asarray(tok)[:, 0]]
+        alive = np.array([r.max_new_tokens > 0 for r in cohort])
+        finished_at = np.where(alive, budget, 0)
+        for step in range(1, budget):
+            logits, state = self._decode(self.params, tok, state)
+            tok = jnp.argmax(logits, -1)[:, None]
+            col = np.asarray(tok)[:, 0]
+            outs.append(col)
+            self.stats.decode_steps += 1
+            for i, r in enumerate(cohort):
+                if not alive[i]:
+                    self.stats.wasted_slots += 1
+                    continue
+                self.stats.useful_tokens += 1
+                if (self.eos_id >= 0 and col[i] == self.eos_id) or \
+                        step + 1 >= r.max_new_tokens:
+                    alive[i] = False
+                    finished_at[i] = step + 1
+            if not alive.any():
+                break
+        gen = np.stack(outs, axis=1)  # (B, steps)
+        dt = time.perf_counter() - t0
+        for i, r in enumerate(cohort):
+            if r.rid < 0:
+                continue
+            r.output = gen[i, : max(int(finished_at[i]), 1)]
+            r.latency_s = dt
+            self.stats.useful_tokens += 1  # the prefill-produced first token

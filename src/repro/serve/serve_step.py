@@ -1,0 +1,128 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token w/ cache).
+
+``decode_32k``/``long_500k`` dry-run shapes lower ``serve_step`` -- a single
+new token against a ``seq_len`` cache.  Cache sharding comes from
+``api.state_logical_axes``: batch over the data axes, cache sequence over
+'model' (and over ('data','model') when batch==1, e.g. long_500k) -- a
+distributed flash-decode: XLA partial-softmaxes the sharded sequence and
+combines with psums.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.core.amp import Policy, make_policy
+from repro.models import api
+from repro.models import transformer as T
+from repro.sharding import ShardingRules, resolve_spec, use_sharding_ctx
+
+
+def _spec_tree_to_shardings(tree, axes_tree, mesh, rules):
+    return jax.tree_util.tree_map(
+        lambda leaf, spec: NamedSharding(
+            mesh, resolve_spec(leaf.shape, spec, rules, mesh)),
+        tree, axes_tree,
+        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def state_shardings(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                    rules: ShardingRules, cache_dtype=jnp.bfloat16):
+    st = api.decode_state_struct(cfg, shape, cache_dtype)
+    axes = api.state_logical_axes(cfg, st)
+    shard = jax.tree_util.tree_map(
+        lambda leaf, spec: NamedSharding(
+            mesh, resolve_spec(leaf.shape, spec, rules, mesh)),
+        st, axes)
+    return st, shard
+
+
+def make_prefill_step(cfg: ModelConfig, tcfg, mesh: Mesh,
+                      rules: ShardingRules, param_specs, param_shapes,
+                      shape: InputShape, cache_dtype=jnp.bfloat16):
+    """jit'd (params, batch) -> (logits, state): state allocated inside."""
+    policy = make_policy(tcfg.precision)
+    from repro.train.train_step import batch_shardings, state_shardings as pst
+    b_struct = api.prefill_batch_struct(cfg, shape)
+    b_shard = batch_shardings(cfg, b_struct, mesh, rules)
+    p_shard = jax.tree_util.tree_map(
+        lambda spec, shp: NamedSharding(
+            mesh, resolve_spec(shp.shape, spec, rules, mesh)),
+        param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    st_struct, st_shard = state_shardings(cfg, shape, mesh, rules, cache_dtype)
+
+    enc_len = cfg.enc_seq if cfg.is_encoder_decoder else 0
+
+    def step(params, batch):
+        with use_sharding_ctx(mesh, rules):
+            state = T.init_decode_state(cfg, shape.global_batch,
+                                        shape.seq_len, cache_dtype,
+                                        enc_len=enc_len)
+            kw = {}
+            if cfg.is_encoder_decoder:
+                kw["enc_frames"] = batch["frames"]
+            if cfg.n_vision_tokens:
+                kw["vision_embeds"] = batch["vision"]
+            logits, state = T.prefill(params, batch["tokens"], cfg, policy,
+                                      state=state, moe_impl=tcfg.moe_impl,
+                                      **kw)
+            return logits, state
+
+    return jax.jit(step, in_shardings=(p_shard, b_shard),
+                   out_shardings=(None, st_shard)), b_struct, st_struct
+
+
+def make_decode_step(cfg: ModelConfig, tcfg, mesh: Mesh,
+                     rules: ShardingRules, param_specs, param_shapes,
+                     shape: InputShape, cache_dtype=jnp.bfloat16):
+    """jit'd (params, token, state) -> (logits, state)."""
+    policy = make_policy(tcfg.precision)
+    p_shard = jax.tree_util.tree_map(
+        lambda spec, shp: NamedSharding(
+            mesh, resolve_spec(shp.shape, spec, rules, mesh)),
+        param_specs, param_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    st_struct, st_shard = state_shardings(cfg, shape, mesh, rules, cache_dtype)
+    b = shape.global_batch
+    tok_shard = NamedSharding(mesh, resolve_spec(
+        (b, 1), ("batch", None), rules, mesh))
+
+    # decode uses the replicated-EP MoE path (batch may not divide
+    # data*model; a2a falls back anyway for seq_len 1)
+    def step(params, token, state):
+        with use_sharding_ctx(mesh, rules):
+            return T.decode_step(params, token, state, cfg, policy,
+                                 moe_impl="replicated")
+
+    return jax.jit(step, in_shardings=(p_shard, tok_shard, st_shard),
+                   out_shardings=(None, st_shard),
+                   donate_argnums=(2,)), st_struct
+
+
+def greedy_generate(params, prompt, cfg: ModelConfig, policy: Policy, *,
+                    max_new: int = 16, max_len: int = 256,
+                    moe_impl: str = "dense"):
+    """Simple single-host generation loop for the examples/ scripts."""
+    b, s = prompt.shape
+    enc_len = cfg.enc_seq if cfg.is_encoder_decoder else 0
+    state = T.init_decode_state(cfg, b, max_len, jnp.float32,
+                                enc_len=enc_len)
+    logits, state = T.prefill(params, prompt, cfg, policy, state=state,
+                              moe_impl=moe_impl)
+    tok = jnp.argmax(logits, -1)[:, None]
+    out = [tok]
+    step = jax.jit(partial(T.decode_step, cfg=cfg, policy=policy,
+                           moe_impl=moe_impl))
+    for _ in range(max_new - 1):
+        logits, state = step(params, tok, state)
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,188 @@
+"""Logical-axis sharding rules.
+
+Parameters and activations are annotated with *logical* axis names
+('embed', 'heads', 'ff', 'experts', 'vocab', ...).  A ruleset maps logical
+names to physical mesh axes; ``resolve_spec`` additionally drops any mapping
+whose mesh-axis size does not divide the tensor dimension (e.g. 4 KV heads on
+a 16-way 'model' axis fall back to replication instead of failing to lower).
+
+The framework's two standard meshes (see launch/mesh.py):
+  single pod : (data=16, model=16)
+  multi pod  : (pod=2, data=16, model=16)
+
+Default rules implement the scheme described in DESIGN.md §3:
+  * batch            -> ('pod', 'data')   [data parallel, paper §3.2]
+  * embed (d_model)  -> 'data'            [FSDP / ZeRO-3 parameter sharding]
+  * heads/ff/vocab/experts/inner -> 'model' [tensor / expert parallel]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Logical axis vocabulary used by model init functions.
+BATCH = "batch"
+SEQ = "seq"
+EMBED = "embed"      # d_model dim of parameters -> FSDP axis
+VOCAB = "vocab"
+HEADS = "heads"
+KV_HEADS = "kv_heads"
+HEAD_DIM = "head_dim"
+FF = "ff"
+EXPERTS = "experts"
+INNER = "inner"      # mamba expanded inner dim
+LAYERS = "layers"    # stacked-block leading dim; never sharded
+KV_SEQ = "kv_seq"    # decode KV-cache sequence dim (seq-sharded caches)
+REPL = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mapping logical axis name -> physical mesh axis (or tuple, or None)."""
+    rules: dict
+
+    def physical(self, logical: Optional[str]):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+
+def make_rules(*, fsdp: bool = True, multi_pod: bool = False,
+               seq_shard: bool = False, pure_dp: bool = False,
+               data_axes: Optional[tuple] = None) -> ShardingRules:
+    """``seq_shard``: sequence parallelism -- activations' seq dim takes the
+    'model' axis (prefill/training win when heads don't divide the model
+    axis; resolve_spec then drops the heads/ff mapping automatically).
+    ``pure_dp``: batch over every mesh axis (ZeRO-1 regime for small
+    models; combine with TrainConfig.pure_dp)."""
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    if pure_dp:
+        batch_axes = batch_axes + ("model",)
+    if data_axes is not None:
+        batch_axes = data_axes
+    return ShardingRules(rules={
+        BATCH: batch_axes,
+        SEQ: "model" if seq_shard else None,
+        EMBED: "data" if fsdp else None,
+        VOCAB: "model",
+        HEADS: "model",
+        KV_HEADS: "model",
+        HEAD_DIM: None,
+        FF: "model",
+        EXPERTS: "model",
+        INNER: "model",
+        LAYERS: None,
+        # decode KV caches: batch takes the data axes first (resolve_spec
+        # marks them used); for batch=1 (long_500k) the cache sequence dim
+        # absorbs BOTH data and model -> 256-way seq-sharded cache.
+        KV_SEQ: ("data", "model"),
+    })
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        out = 1
+        for a in phys:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[phys]
+
+
+def resolve_spec(shape: Sequence[int], logical_axes: Sequence[Optional[str]],
+                 rules: ShardingRules, mesh: Mesh) -> P:
+    """Turn logical axes into a PartitionSpec, dropping non-divisible axes."""
+    assert len(shape) == len(logical_axes), (shape, logical_axes)
+    used = set()
+    parts = []
+    for dim, logical in zip(shape, logical_axes):
+        phys = rules.physical(logical)
+        if phys is None:
+            parts.append(None)
+            continue
+        phys_t = tuple(phys) if isinstance(phys, (tuple, list)) else (phys,)
+        # keep only the prefix of axes that divides evenly and is unused
+        kept = []
+        rem = dim
+        for a in phys_t:
+            sz = mesh.shape[a]
+            if a in used or rem % sz != 0:
+                continue
+            kept.append(a)
+            rem //= sz
+        if not kept:
+            parts.append(None)
+        elif len(kept) == 1:
+            parts.append(kept[0])
+            used.add(kept[0])
+        else:
+            parts.append(tuple(kept))
+            used.update(kept)
+    return P(*parts)
+
+
+def named_sharding(shape, logical_axes, rules: ShardingRules, mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical_axes, rules, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Annotation of live values inside jitted functions.
+# ---------------------------------------------------------------------------
+_CTX: dict = {"mesh": None, "rules": None}
+
+
+class use_sharding_ctx:
+    """Context manager installing (mesh, rules) for ``lshard`` annotations."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[ShardingRules]):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self._prev = dict(_CTX)
+        _CTX["mesh"], _CTX["rules"] = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _CTX.update(self._prev)
+        return False
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX["mesh"]
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return _CTX["rules"]
+
+
+def lshard(x: jax.Array, *logical_axes) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical axes, if a mesh is set."""
+    mesh, rules = _CTX["mesh"], _CTX["rules"]
+    if mesh is None or rules is None:
+        return x
+    spec = resolve_spec(x.shape, logical_axes, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Param spec trees: init functions return (params, specs) where specs mirrors
+# params with tuples of logical axis names per leaf.
+# ---------------------------------------------------------------------------
+
+def specs_to_shardings(specs: Any, shapes: Any, rules: ShardingRules, mesh: Mesh):
+    """Map a logical-spec pytree + matching shape pytree to NamedShardings."""
+    return jax.tree_util.tree_map(
+        lambda spec, shaped: named_sharding(shaped.shape, spec, rules, mesh),
+        specs, shapes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def eval_shape_with_specs(init_fn, *args):
+    """jax.eval_shape wrapper returning shapes for a params-returning init."""
+    return jax.eval_shape(init_fn, *args)

@@ -1,0 +1,72 @@
+"""Checkpointing: flatten the TrainState pytree to an .npz + JSON treedef.
+
+Single-container-per-step layout (mirrors the data sharder's philosophy);
+restores onto any mesh because arrays are saved unsharded (fine at the
+scales the examples train; production would reuse the shard writer).
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _key_to_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any, *,
+                    keep: int = 3) -> Path:
+    out = Path(ckpt_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    arrays = {f"a{i:06d}": np.asarray(leaf) for i, (_, leaf) in
+              enumerate(flat)}
+    names = [_key_to_str(path) for path, _ in flat]
+    path = out / f"ckpt_{step:08d}.npz"
+    np.savez(path, **arrays)
+    (out / f"ckpt_{step:08d}.json").write_text(
+        json.dumps({"step": step, "names": names}))
+    # retention
+    ckpts = sorted(out.glob("ckpt_*.npz"))
+    for old in ckpts[:-keep]:
+        old.unlink(missing_ok=True)
+        old.with_suffix(".json").unlink(missing_ok=True)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ckpts = sorted(Path(ckpt_dir).glob("ckpt_*.npz"))
+    if not ckpts:
+        return None
+    return int(re.search(r"ckpt_(\d+)", ckpts[-1].name).group(1))
+
+
+def restore_checkpoint(ckpt_dir: str, like: Any,
+                       step: Optional[int] = None) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (dtypes/shapes validated)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoints in {ckpt_dir}"
+    path = Path(ckpt_dir) / f"ckpt_{step:08d}.npz"
+    flat, treedef = jax.tree_util.tree_flatten(like)
+    with np.load(path) as z:
+        leaves = [z[f"a{i:06d}"] for i in range(len(flat))]
+    for got, want in zip(leaves, flat):
+        assert got.shape == tuple(want.shape), (got.shape, want.shape)
+    restored = [jax.numpy.asarray(g, dtype=w.dtype)
+                for g, w in zip(leaves, flat)]
+    return jax.tree_util.tree_unflatten(treedef, restored), step

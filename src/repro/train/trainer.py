@@ -1,0 +1,57 @@
+"""Training loop driver: step function x data stream x checkpoints x logs."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.utils import logger
+
+
+def train_loop(step_fn: Callable, state, batches: Iterator, *,
+               total_steps: int, log_every: int = 10,
+               ckpt_dir: Optional[str] = None, ckpt_every: int = 500,
+               resume: bool = False, tokens_per_step: Optional[int] = None,
+               metrics_hook: Optional[Callable] = None):
+    """Returns (final_state, history list of metric dicts)."""
+    start = 0
+    if resume and ckpt_dir:
+        try:
+            state, start = restore_checkpoint(ckpt_dir, state)
+            logger.info("resumed from step %d", start)
+        except AssertionError:
+            pass
+
+    history = []
+    t0 = time.time()
+    window_t0, window_steps = t0, 0
+    for step in range(start, total_steps):
+        batch = next(batches)
+        state, metrics = step_fn(state, batch)
+        window_steps += 1
+        if (step + 1) % log_every == 0 or step + 1 == total_steps:
+            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = time.time() - window_t0
+            metrics["steps_per_s"] = window_steps / max(dt, 1e-9)
+            if tokens_per_step:
+                metrics["tokens_per_s"] = metrics["steps_per_s"] * \
+                    tokens_per_step
+            metrics["step"] = step + 1
+            history.append(metrics)
+            logger.info(
+                "step %d | loss %.4f | %s%.1f steps/s",
+                step + 1, metrics.get("loss", float("nan")),
+                (f"{metrics['tokens_per_s']:.0f} tok/s | "
+                 if "tokens_per_s" in metrics else ""),
+                metrics["steps_per_s"])
+            if metrics_hook:
+                metrics_hook(metrics)
+            window_t0, window_steps = time.time(), 0
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, state)
+    if ckpt_dir:
+        save_checkpoint(ckpt_dir, total_steps, state)
+    return state, history

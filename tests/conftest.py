@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_multidevice(code: str, n_devices: int = 8, timeout: int = 600,
+                    extra_env: dict = None) -> str:
+    """Run ``code`` in a subprocess with N forced host devices.
+
+    XLA locks the device count at first jax import, so multi-device tests
+    must run out-of-process (the main pytest process stays 1-device).
+    Raises on failure; returns stdout.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(SRC)
+    env.update(extra_env or {})
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidevice subprocess failed:\n{proc.stdout}\n{proc.stderr}")
+    return proc.stdout

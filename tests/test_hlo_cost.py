@@ -1,0 +1,84 @@
+"""The loop-aware HLO cost analyzer that backs the roofline (launch/hlo_cost)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_cost import HloCostAnalyzer, analyze
+
+
+def test_single_matmul_flops_exact():
+    x = jnp.ones((512, 512))
+    c = jax.jit(lambda a, b: a @ b).lower(x, x).compile()
+    a = analyze(c.as_text())
+    np.testing.assert_allclose(a["flops"], 2 * 512 ** 3, rtol=0.01)
+
+
+def test_scan_multiplies_by_trip_count():
+    x = jnp.ones((256, 256))
+    w = jnp.ones((10, 256, 256))
+    c = jax.jit(lambda x, w: jax.lax.scan(
+        lambda c, wi: (c @ wi, None), x, w)[0]).lower(x, w).compile()
+    a = analyze(c.as_text())
+    np.testing.assert_allclose(a["flops"], 10 * 2 * 256 ** 3, rtol=0.02)
+
+
+def test_nested_scan_multiplies_twice():
+    x = jnp.ones((64, 64))
+    w = jnp.ones((4, 3, 64, 64))
+
+    def inner(c, ws):
+        return jax.lax.scan(lambda c, wi: (c @ wi, None), c, ws)
+
+    c = jax.jit(lambda x, w: jax.lax.scan(
+        lambda c, ws: (inner(c, ws)[0], None), x, w)[0]).lower(x, w).compile()
+    a = analyze(c.as_text())
+    np.testing.assert_allclose(a["flops"], 12 * 2 * 64 ** 3, rtol=0.05)
+
+
+def test_bytes_reasonable_for_elementwise():
+    x = jnp.ones((1024, 1024))
+    c = jax.jit(lambda x: x * 2.0 + 1.0).lower(x).compile()
+    a = analyze(c.as_text())
+    # one read + one write = 8 MiB; allow up to 3x for copies
+    assert 0.8 * 8e6 < a["bytes"] < 3 * 8e6
+
+
+def test_dynamic_slice_counts_window_only():
+    big = jnp.ones((1024, 1024))
+
+    def f(big, i):
+        return jax.lax.dynamic_slice(big, (i, 0), (8, 1024)).sum()
+
+    c = jax.jit(f).lower(big, jnp.int32(5)).compile()
+    a = analyze(c.as_text())
+    assert a["bytes"] < 1e6  # window is 32KB, full array would be 4MB
+
+
+def test_entry_found_and_memoized():
+    x = jnp.ones((128, 128))
+    c = jax.jit(lambda x: (x @ x) @ x).lower(x).compile()
+    an = HloCostAnalyzer(c.as_text())
+    assert an.entry is not None
+    c1 = an.cost()
+    c2 = an.cost()
+    assert c1.flops == c2.flops > 0
+
+
+def test_vmem_scope_excludes_kernel_intermediates():
+    """named_scope regions modeled as VMEM kernels: intra-scope traffic
+    drops to boundary (qkv in / out) bytes; FLOPs unchanged."""
+    from repro.models.layers import chunked_attention
+    q = jnp.ones((1, 512, 4, 64), jnp.bfloat16)
+    k = jnp.ones((1, 512, 2, 64), jnp.bfloat16)
+    v = jnp.ones((1, 512, 2, 64), jnp.bfloat16)
+    c = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, q_chunk=128, kv_chunk=128)
+    ).lower(q, k, v).compile()
+    hlo = c.as_text()
+    base = analyze(hlo)
+    vmem = analyze(hlo, vmem_scopes=("flash_attention",))
+    assert vmem["flops"] == base["flops"]
+    assert vmem["bytes"] < 0.25 * base["bytes"]
+    # boundary traffic still counted (>= one qkv read + out write)
+    io = (q.size + k.size + v.size + q.size) * 2
+    assert vmem["bytes"] >= 0.5 * io

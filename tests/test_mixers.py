@@ -1,0 +1,115 @@
+"""RWKV6 / Mamba sequence mixers: chunked == sequential oracle, decode ==
+train, state handoff."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import mamba as MB
+from repro.models import rwkv as RW
+
+POL = make_policy("f32")
+
+
+class TestRWKV6:
+    def setup_method(self):
+        self.cfg = smoke_variant(get_config("rwkv6-1.6b"), d_model=128)
+
+    def test_wkv6_chunked_equals_sequential(self):
+        cfg = self.cfg
+        h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+        b, s = 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, hs)) for i in range(3))
+        logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, hs)) - 2.0)
+        u = 0.5 * jax.random.normal(ks[4], (h, hs))
+        s0 = 0.1 * jax.random.normal(ks[5], (b, h, hs, hs))
+        for chunk in (8, 16, 64):
+            o_c, sf_c = RW.wkv6_chunked(r, k, v, logw, u, s0, chunk=chunk)
+            o_s, sf_s = RW.wkv6_sequential(r, k, v, logw, u, s0)
+            np.testing.assert_allclose(o_c, o_s, rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(sf_c, sf_s, rtol=1e-4, atol=1e-4)
+
+    def test_wkv6_strong_decay_no_overflow(self):
+        """Near-zero decay (w->0) must stay finite in the chunked form."""
+        cfg = self.cfg
+        h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
+        b, s = 1, 32
+        r = jnp.ones((b, s, h, hs))
+        k = jnp.ones((b, s, h, hs))
+        v = jnp.ones((b, s, h, hs))
+        logw = jnp.full((b, s, h, hs), -50.0)  # w ~ 2e-22
+        u = jnp.zeros((h, hs))
+        s0 = jnp.zeros((b, h, hs, hs))
+        o, sf = RW.wkv6_chunked(r, k, v, logw, u, s0, chunk=8)
+        assert np.isfinite(np.asarray(o)).all()
+        assert np.isfinite(np.asarray(sf)).all()
+
+    def test_time_mix_decode_equals_train(self):
+        cfg = self.cfg
+        params, _ = RW.init_time_mix(jax.random.PRNGKey(7), cfg)
+        b = 2
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(8), (b, 24, cfg.d_model))
+        y_full, st_full = RW.apply_time_mix(params, x, cfg, POL,
+                                            return_state=True, chunk=8)
+        st = {"tm_shift": jnp.zeros((b, 1, cfg.d_model)),
+              "wkv": jnp.zeros((b, cfg.rwkv_n_heads, cfg.rwkv_head_size,
+                                cfg.rwkv_head_size))}
+        outs = []
+        for t in range(24):
+            y, st = RW.apply_time_mix(params, x[:, t:t + 1], cfg, POL,
+                                      state=st, return_state=True)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.concatenate(outs, 1), y_full,
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(st["wkv"], st_full["wkv"],
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMamba:
+    def setup_method(self):
+        self.cfg = smoke_variant(get_config("jamba-1.5-large-398b"),
+                                 d_model=64)
+
+    def test_chunked_equals_sequential(self):
+        cfg = self.cfg
+        params, _ = MB.init_mamba(jax.random.PRNGKey(0), cfg)
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+        for chunk in (8, 16, 64):
+            y_c, st_c = MB.apply_mamba(params, x, cfg, POL,
+                                       return_state=True, chunk=chunk)
+            y_s, st_s = MB.apply_mamba(params, x, cfg, POL,
+                                       return_state=True, use_chunked=False)
+            np.testing.assert_allclose(y_c, y_s, rtol=1e-4, atol=1e-5)
+            np.testing.assert_allclose(st_c["ssm"], st_s["ssm"],
+                                       rtol=1e-4, atol=1e-5)
+
+    def test_decode_equals_train(self):
+        cfg = self.cfg
+        params, _ = MB.init_mamba(jax.random.PRNGKey(0), cfg)
+        b, s = 2, 16
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (b, s, cfg.d_model))
+        y_full, _ = MB.apply_mamba(params, x, cfg, POL, return_state=True)
+        state = MB.init_mamba_state(cfg, b)
+        outs = []
+        for t in range(s):
+            y, state = MB.apply_mamba(params, x[:, t:t + 1], cfg, POL,
+                                      state=state, return_state=True)
+            outs.append(y)
+        np.testing.assert_allclose(jnp.concatenate(outs, 1), y_full,
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_handoff_chunk_boundary(self):
+        """prefill first half -> state -> second half == full forward."""
+        cfg = self.cfg
+        params, _ = MB.init_mamba(jax.random.PRNGKey(0), cfg)
+        x = 0.5 * jax.random.normal(jax.random.PRNGKey(1), (1, 32, cfg.d_model))
+        y_full, _ = MB.apply_mamba(params, x, cfg, POL, return_state=True)
+        y1, st = MB.apply_mamba(params, x[:, :16], cfg, POL,
+                                return_state=True)
+        y2, _ = MB.apply_mamba(params, x[:, 16:], cfg, POL, state=st,
+                               return_state=True)
+        np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                                   rtol=1e-4, atol=1e-4)

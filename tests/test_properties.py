@@ -1,0 +1,174 @@
+"""Hypothesis property tests for the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.amp import DynamicLossScale, make_policy
+from repro.core.collectives import bucket_leaves
+from repro.core.grad_accum import accumulate_gradients, split_microbatches
+from repro.optim import lamb_init, lamb_update, warmup_poly_decay
+from repro.sharding import make_rules, resolve_spec
+from repro.launch.mesh import make_host_mesh
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Gradient accumulation == big-batch gradient (paper §4.4 correctness)
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(accum=st.sampled_from([1, 2, 4, 8]),
+       seed=st.integers(0, 2 ** 16))
+def test_grad_accum_equals_full_batch(accum, seed):
+    d = 8
+    w = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(seed + 1), (8, d)),
+             "y": jax.random.normal(jax.random.PRNGKey(seed + 2), (8, d))}
+
+    def loss_fn(w, b):
+        pred = b["x"] @ w
+        return jnp.mean((pred - b["y"]) ** 2), {}
+
+    loss_a, grads_a, _ = accumulate_gradients(loss_fn, w, batch, accum)
+    loss_1, grads_1, _ = accumulate_gradients(loss_fn, w, batch, 1)
+    np.testing.assert_allclose(loss_a, loss_1, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(grads_a, grads_1, rtol=1e-4, atol=1e-6)
+
+
+@SETTINGS
+@given(b=st.sampled_from([8, 16, 24]), accum=st.sampled_from([1, 2, 4, 8]))
+def test_split_microbatches_exact_cover(b, accum):
+    if b % accum:
+        return
+    x = jnp.arange(b * 3).reshape(b, 3)
+    micro = split_microbatches({"x": x}, accum)["x"]
+    assert micro.shape == (accum, b // accum, 3)
+    np.testing.assert_array_equal(micro.reshape(b, 3), x)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic loss scaling (paper §4.2)
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(n_bad=st.integers(0, 5), n_good=st.integers(0, 8))
+def test_loss_scale_dynamics(n_bad, n_good):
+    ls = DynamicLossScale(initial_scale=2.0 ** 10, growth_interval=4)
+    state = ls.init()
+    for _ in range(n_bad):
+        state, apply = ls.update(state, jnp.asarray(False))
+        assert not bool(apply)
+    # scale halves per bad step, never below min
+    assert float(state.scale) == max(2.0 ** 10 * 0.5 ** n_bad, 1.0)
+    assert int(state.total_skipped) == n_bad
+    for _ in range(n_good):
+        state, apply = ls.update(state, jnp.asarray(True))
+        assert bool(apply)
+    # growth: one doubling per growth_interval consecutive good steps
+    expected = max(2.0 ** 10 * 0.5 ** n_bad, 1.0) * 2.0 ** (n_good // 4)
+    assert float(state.scale) == min(expected, ls.max_scale)
+
+
+def test_scaled_gradients_unscale_exactly():
+    ls = DynamicLossScale(initial_scale=2.0 ** 14)
+    state = ls.init()
+    g = {"a": jnp.asarray([1e-6, 2e-6], jnp.float32)}
+    scaled = jax.tree_util.tree_map(lambda x: x * state.scale, g)
+    back = ls.unscale_grads(scaled, state)
+    np.testing.assert_allclose(back["a"], g["a"], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# LAMB invariants
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(seed=st.integers(0, 100))
+def test_lamb_skip_update_freezes_state(seed):
+    w = {"w": jax.random.normal(jax.random.PRNGKey(seed), (16,))}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (16,))}
+    state = lamb_init(w)
+    skipped = lamb_update(g, state, lr=0.1, skip_update=jnp.asarray(True))
+    np.testing.assert_array_equal(skipped.master["w"], state.master["w"])
+    np.testing.assert_array_equal(skipped.m["w"], state.m["w"])
+    assert int(skipped.step) == 0
+    applied = lamb_update(g, state, lr=0.1, skip_update=jnp.asarray(False))
+    assert int(applied.step) == 1
+    assert not np.allclose(applied.master["w"], state.master["w"])
+
+
+@SETTINGS
+@given(seed=st.integers(0, 100))
+def test_lamb_trust_ratio_scales_with_weight_norm(seed):
+    """Scaling the weights k-fold scales the LAMB step ~k-fold (layer-wise
+    normalisation -- the property the paper relies on for large batch).
+    lr is fixed large enough that fp32 cancellation in (w' - w) stays small.
+    """
+    lr = 1e-2
+    w1 = {"w": 1.0 + jax.random.uniform(jax.random.PRNGKey(seed), (64,))}
+    w2 = {"w": 10.0 * w1["w"]}
+    g = {"w": jax.random.normal(jax.random.PRNGKey(seed + 1), (64,))}
+    s1 = lamb_update(g, lamb_init(w1), lr=lr, wd=0.0)
+    s2 = lamb_update(g, lamb_init(w2), lr=lr, wd=0.0)
+    d1 = np.linalg.norm(np.asarray(s1.master["w"] - w1["w"]))
+    d2 = np.linalg.norm(np.asarray(s2.master["w"] - w2["w"]))
+    np.testing.assert_allclose(d2 / d1, 10.0, rtol=2e-2)
+
+
+def test_warmup_poly_decay_shape():
+    lr = [float(warmup_poly_decay(s, base_lr=1e-3, warmup_steps=10,
+                                  total_steps=100)) for s in range(101)]
+    assert lr[0] == 0.0
+    assert abs(lr[10] - 1e-3) < 1e-9
+    assert lr[100] <= lr[50] <= lr[10]
+    assert all(a <= b + 1e-12 for a, b in zip(lr[:10], lr[1:11]))
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec resolution
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(dim=st.integers(1, 64), vocab_mult=st.integers(1, 8))
+def test_resolve_spec_divisibility(dim, vocab_mult):
+    """Non-divisible dims fall back to replication, never invalid specs."""
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    rules = make_rules()
+    spec = resolve_spec((dim, vocab_mult * 16), ("embed", "vocab"), rules,
+                        mesh)
+    # with mesh sizes 1, everything divides; spec axes must be unique
+    used = [a for a in jax.tree_util.tree_leaves(tuple(spec)) if a]
+    assert len(used) == len(set(used))
+
+
+def test_resolve_spec_drops_nondivisible():
+    import jax as _jax
+    if len(_jax.devices()) != 1:
+        return
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    rules = make_rules()
+    # 7 is not divisible by anything > 1; with 1-device mesh all sizes are 1
+    spec = resolve_spec((7, 7), ("embed", "heads"), rules, mesh)
+    assert len(spec) == 2
+
+
+# ---------------------------------------------------------------------------
+# Bucketing (paper §4.4 overlap)
+# ---------------------------------------------------------------------------
+
+@SETTINGS
+@given(sizes=st.lists(st.integers(1, 2000), min_size=1, max_size=30),
+       bucket_kb=st.sampled_from([1, 4, 16]))
+def test_bucket_leaves_exact_cover_and_bounded(sizes, bucket_kb):
+    tree = {f"p{i}": jnp.zeros((n,), jnp.float32)
+            for i, n in enumerate(sizes)}
+    buckets = bucket_leaves(tree, bucket_bytes=bucket_kb * 1024)
+    flat = [i for b in buckets for i in b]
+    assert sorted(flat) == list(range(len(sizes)))  # exact cover
+    leaves = jax.tree_util.tree_leaves(tree)
+    for b in buckets:
+        nbytes = sum(leaves[i].size * 4 for i in b)
+        # a bucket exceeds the limit only if it is a single oversized leaf
+        assert nbytes <= bucket_kb * 1024 or len(b) == 1

@@ -1,0 +1,107 @@
+"""System behaviour: config registry completeness, shape-support matrix,
+abstract params, state sharding specs resolve for every (arch x shape)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, INPUT_SHAPES, get_config
+from repro.models import api
+
+
+def test_all_assigned_archs_registered():
+    assert len(ASSIGNED) == 10
+    families = {get_config(a).family for a in ASSIGNED}
+    assert families == {"ssm", "moe", "dense", "audio", "hybrid", "vlm"}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_configs_match_assignment(arch):
+    cfg = get_config(arch)
+    expected = {
+        "rwkv6-1.6b": (24, 2048, 7168, 65536),
+        "qwen3-moe-30b-a3b": (48, 2048, 768, 151936),
+        "granite-moe-3b-a800m": (32, 1536, 512, 49155),
+        "qwen1.5-32b": (64, 5120, 27392, 152064),
+        "deepseek-coder-33b": (62, 7168, 19200, 32256),
+        "whisper-small": (12, 768, 3072, 51865),
+        "jamba-1.5-large-398b": (72, 8192, 24576, 65536),
+        "deepseek-7b": (30, 4096, 11008, 102400),
+        "gemma2-27b": (46, 4608, 36864, 256000),
+        "qwen2-vl-7b": (28, 3584, 18944, 152064),
+    }[arch]
+    assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == expected
+    assert cfg.source  # every config cites its source
+
+
+def test_moe_configs():
+    q = get_config("qwen3-moe-30b-a3b")
+    assert (q.n_experts, q.top_k) == (128, 8)
+    g = get_config("granite-moe-3b-a800m")
+    assert (g.n_experts, g.top_k) == (40, 8)
+    j = get_config("jamba-1.5-large-398b")
+    assert (j.n_experts, j.top_k) == (16, 2)
+    mixers = [m for m, _ in j.block_pattern]
+    assert mixers.count("attn") == 1 and mixers.count("mamba") == 7
+
+
+def test_param_counts_plausible():
+    """Full-size analytic parameter counts are in the right ballpark."""
+    assert 1.2e9 < get_config("rwkv6-1.6b").param_count() < 2.2e9
+    assert 25e9 < get_config("qwen3-moe-30b-a3b").param_count() < 36e9
+    assert 28e9 < get_config("qwen1.5-32b").param_count() < 36e9
+    assert 28e9 < get_config("deepseek-coder-33b").param_count() < 38e9
+    assert 5.5e9 < get_config("deepseek-7b").param_count() < 8e9
+    assert 22e9 < get_config("gemma2-27b").param_count() < 32e9
+    assert 300e9 < get_config("jamba-1.5-large-398b").param_count() < 480e9
+    # MoE active params far below total
+    q = get_config("qwen3-moe-30b-a3b")
+    assert q.param_count(active_only=True) < 0.2 * q.param_count()
+
+
+def test_shape_support_matrix():
+    """DESIGN.md §4 carve-outs, mechanically."""
+    rows = {}
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        rows[arch] = {s: api.shape_supported(cfg, sh)[0]
+                      for s, sh in INPUT_SHAPES.items()}
+    # everything runs train + prefill + decode_32k
+    for arch, r in rows.items():
+        assert r["train_4k"] and r["prefill_32k"] and r["decode_32k"], arch
+    # long_500k only for sub-quadratic-capable archs
+    assert rows["rwkv6-1.6b"]["long_500k"]
+    assert rows["jamba-1.5-large-398b"]["long_500k"]
+    assert rows["gemma2-27b"]["long_500k"]          # sliding-window variant
+    for arch in ("qwen1.5-32b", "deepseek-coder-33b", "deepseek-7b",
+                 "qwen3-moe-30b-a3b", "granite-moe-3b-a800m", "qwen2-vl-7b",
+                 "whisper-small"):
+        assert not rows[arch]["long_500k"], arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_abstract_params_no_allocation(arch):
+    shapes, specs = api.abstract_params(get_config(arch))
+    leaves = jax.tree_util.tree_leaves(shapes)
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    assert len(spec_leaves) == len(leaves)
+    for shp, spec in zip(leaves, spec_leaves):
+        assert len(spec) == len(shp.shape), (arch, spec, shp.shape)
+
+
+@pytest.mark.parametrize("shape_name", list(INPUT_SHAPES))
+def test_decode_state_specs_cover_tree(shape_name):
+    cfg = get_config("jamba-1.5-large-398b")
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind != "decode":
+        pytest.skip("decode shapes only")
+    st = api.decode_state_struct(cfg, shape)
+    axes = api.state_logical_axes(cfg, st)
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+    for (pa, leaf), (ps, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(st)[0],
+            jax.tree_util.tree_flatten_with_path(axes, is_leaf=is_spec)[0]):
+        assert len(spec) == len(leaf.shape), (pa, spec, leaf.shape)
