@@ -21,6 +21,7 @@ MODULES = [
     ("table7", "benchmarks.table7_cost"),
     ("fig8", "benchmarks.fig8_opt_equivalence"),
     ("roofline", "benchmarks.roofline"),
+    ("serve", "benchmarks.serve_continuous"),
 ]
 
 

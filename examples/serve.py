@@ -1,11 +1,17 @@
 """Serve a small model with batched requests: prefill + batched decode.
 
   PYTHONPATH=src python examples/serve.py [--arch deepseek-7b] \
-      [--batch 4] [--prompt-len 32] [--new-tokens 16]
+      [--batch 4] [--prompt-len 32] [--new-tokens 16] \
+      [--mode raw|cohort|continuous]
 
-Exercises the production serving path on a reduced config: decode state
-allocation, prefill fill-in, per-step KV-cache update (ring buffers for
-sliding-window layers), and reports tokens/s.
+``--mode raw`` (default) exercises the bare serving path on a reduced
+config: decode state allocation, prefill fill-in, per-step KV-cache update
+(ring buffers for sliding-window layers), and reports tokens/s.
+
+``--mode cohort`` / ``--mode continuous`` run the request schedulers from
+repro/serve/scheduler.py on a synthetic mixed-length workload and report
+slot-utilisation -- continuous batching refills slots the moment a request
+finishes, cohort decodes in lockstep until the longest request drains.
 """
 import argparse
 import time
@@ -20,12 +26,44 @@ from repro.models import transformer as T
 from repro.utils import logger, tree_count
 
 
+def run_scheduler(args, cfg, pol, params):
+    from repro.serve.scheduler import (CohortScheduler, ContinuousScheduler,
+                                       Request)
+    max_len = args.prompt_len + args.new_tokens
+    if args.mode == "continuous":
+        sched = ContinuousScheduler(
+            params, cfg, pol, batch=args.batch, max_len=max_len,
+            prefill_len=min(args.prompt_len, max_len))
+    else:
+        sched = CohortScheduler(params, cfg, pol, batch=args.batch,
+                                max_len=max_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        sched.submit(Request(
+            rid=i,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(4, args.prompt_len + 1)),
+                                dtype=np.int32),
+            max_new_tokens=int(rng.integers(2, args.new_tokens + 1))))
+    done = sched.run()
+    st = sched.stats
+    logger.info("%s: %d requests done, %d useful tokens, %d wasted slots",
+                args.mode, len(done), st.useful_tokens, st.wasted_slots)
+    logger.info("slot utilisation %.3f, %.1f tok/s, p50 latency %.3fs",
+                st.slot_utilisation, st.tokens_per_s,
+                float(np.median([r.latency_s for r in done])))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="deepseek-7b")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--mode", default="raw",
+                    choices=["raw", "cohort", "continuous"])
+    ap.add_argument("--requests", type=int, default=12,
+                    help="workload size for the scheduler modes")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))
@@ -35,6 +73,9 @@ def main():
     params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
     logger.info("serving %s (reduced): %.2fM params", cfg.arch_id,
                 tree_count(params) / 1e6)
+
+    if args.mode != "raw":
+        return run_scheduler(args, cfg, pol, params)
 
     b, s = args.batch, args.prompt_len
     prompt = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,

@@ -1,0 +1,30 @@
+#!/usr/bin/env bash
+# CI entrypoint: tier-1 test suite + a 2-device serve smoke on CPU.
+#
+#   bash scripts/ci.sh            # everything
+#   bash scripts/ci.sh tests      # tier-1 pytest only
+#   bash scripts/ci.sh serve      # 2-device serve example smoke only
+#
+# The serve smoke forces 2 host devices so scheduler / sharding regressions
+# in the decode path surface without accelerators.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+step="${1:-all}"
+
+if [[ "$step" == "all" || "$step" == "tests" ]]; then
+    echo "=== tier-1: pytest ==="
+    python -m pytest -x -q
+fi
+
+if [[ "$step" == "all" || "$step" == "serve" ]]; then
+    echo "=== serve smoke: 2 host devices, cohort + continuous ==="
+    export XLA_FLAGS="--xla_force_host_platform_device_count=2${XLA_FLAGS:+ $XLA_FLAGS}"
+    python examples/serve.py --mode cohort --batch 2 --prompt-len 8 \
+        --new-tokens 4 --requests 4
+    python examples/serve.py --mode continuous --batch 2 --prompt-len 8 \
+        --new-tokens 4 --requests 4
+fi
+
+echo "CI OK"

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.compat import axis_size
+
 
 # ---------------------------------------------------------------------------
 # Ring all-reduce from ppermute (NCCL's algorithm, paper ref [31]).
@@ -42,7 +44,7 @@ def ring_all_reduce(x: jax.Array, axis_name: str) -> jax.Array:
     Must be called inside shard_map/pmap with ``axis_name`` bound.
     The array's leading dim is chunked N ways (padded if needed).
     """
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     if n == 1:
         return x
     idx = jax.lax.axis_index(axis_name)
@@ -103,7 +105,7 @@ def hierarchical_psum(x: jax.Array, fast_axis, slow_axis) -> jax.Array:
     fast = (fast_axis,) if isinstance(fast_axis, str) else tuple(fast_axis)
     nf = 1
     for a in fast:
-        nf *= jax.lax.axis_size(a)
+        nf *= axis_size(a)
     flat = x.reshape(-1)
     if flat.size % nf != 0:
         return jax.lax.psum(jax.lax.psum(x, fast), slow_axis)

@@ -1,0 +1,66 @@
+"""jax version-compatibility shims (0.4.x <-> 0.5+).
+
+The repo targets current jax but must degrade gracefully on 0.4.x (the CI
+CPU image): ``jax.sharding.AxisType`` and the top-level ``jax.shard_map``
+(with its ``check_vma`` flag) only exist on newer releases.  Everything
+version-dependent funnels through here so call sites stay clean.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:  # jax 0.4.x: plain meshes are Auto everywhere
+    AxisType = None
+
+
+def make_mesh(shape, axes) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with explicit Auto axis types where supported."""
+    if AxisType is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a bound mesh axis inside shard_map.
+
+    ``jax.lax.axis_size`` only exists on newer jax; ``psum`` of the literal
+    1 constant-folds to the same Python int on 0.4.x.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` to a flat dict.
+
+    jax 0.4.x returns a one-element list of per-program dicts; newer jax
+    returns the dict directly.
+    """
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on 0.4.x.
+
+    ``check_vma`` maps to 0.4.x's ``check_rep`` (same meaning: verify that
+    outputs declared replicated really are; False for collectives the type
+    system cannot see through, e.g. ppermute rings).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)

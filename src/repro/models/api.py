@@ -182,7 +182,7 @@ def state_logical_axes(cfg: ModelConfig, state_tree) -> Any:
         names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
         nd = len(leaf.shape)
         if "pos" in names:
-            return ()
+            return (BATCH,)[:nd]  # (B,) per-slot decode positions
         if "cache" in names or "cross" in names:
             return (LAYERS, BATCH, KV_SEQ, KV_HEADS, None)[:nd]
         if "conv" in names:

@@ -179,7 +179,11 @@ def naive_attention(q, k, v, *, causal: bool, window: int = 0,
                     kv_len: Optional[jax.Array] = None,
                     reduce_dtype=jnp.float32) -> jax.Array:
     """Reference attention.  q: (B,Sq,H,Dh); k,v: (B,Skv,KV,Dh).  GQA via
-    head grouping.  Used for short sequences and as the flash oracle."""
+    head grouping.  Used for short sequences and as the flash oracle.
+
+    ``kv_len`` limits the valid KV slots: a scalar applies to every batch
+    row; a (B,) vector gives each row its own length (continuous batching,
+    where slots sit at independent decode positions)."""
     b, sq, h, dh = q.shape
     skv, kvh = k.shape[1], k.shape[2]
     g = h // kvh
@@ -197,8 +201,15 @@ def naive_attention(q, k, v, *, causal: bool, window: int = 0,
     if window:
         mask &= ki > qi - window
     if kv_len is not None:
-        mask = mask & (ki < kv_len)
-    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim:  # (B,) per-slot valid lengths
+            mask = mask[None] & (ki[None] < kvl[:, None, None])
+        else:
+            mask = mask & (ki < kvl)
+    if mask.ndim == 2:
+        mask = mask[None]
+    # mask: (1|B, Sq, Skv) broadcast over the (B, KV, g, Sq, Skv) logits
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
     probs = jax.nn.softmax(logits, axis=-1)
     probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
     out = jnp.einsum("bvgqk,bkvd->bqvgd", probs.astype(v.dtype), v,
@@ -427,7 +438,9 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
     Returns (y, new_cache_or_None).
     cache: {"k": (B, Smax, KV, Dh), "v": ...} -- decode writes the new token
     at ``cache_pos`` (ring-buffer index) and attends over ``kv_len`` valid
-    slots.  ``static_kv``: cross-attention -- KV come from ``kv_source``
+    slots.  ``cache_pos``/``kv_len`` may be scalars (lockstep cohort decode)
+    or (B,) vectors (continuous batching: each slot at its own position).
+    ``static_kv``: cross-attention -- KV come from ``kv_source``
     (prefill) or verbatim from ``cache`` (decode); never updated in place.
     """
     b, s, d = x.shape
@@ -483,14 +496,20 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
     elif cache is not None:
         # decode: write new kv at ring index cache_pos, attend kv_len slots
         ck, cv = cache["k"], cache["v"]
-        ck = jax.lax.dynamic_update_slice(
-            ck, k.astype(ck.dtype), (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cv, v.astype(cv.dtype), (0, cache_pos, 0, 0))
+        cpos = jnp.asarray(cache_pos)
+        if cpos.ndim:  # (B,) per-slot ring indices: scatter one row each
+            assert s == 1, "per-slot cache_pos implies single-token decode"
+            ck = ck.at[jnp.arange(b), cpos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[jnp.arange(b), cpos].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, cpos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, cpos, 0, 0))
         if return_cache:
             new_cache = {"k": ck, "v": cv}
         if kv_len is None:
-            kv_len = cache_pos + s
+            kv_len = cpos + s
         # no causal/window masks: the ring buffer's kv_len IS the window
         out = naive_attention(q, ck, cv, causal=False, window=0,
                               softcap=softcap, q_offset=0,
@@ -601,11 +620,15 @@ def init_embedding(key, cfg: ModelConfig) -> Tuple[Params, Specs]:
 
 def embed_tokens(params: Params, tokens: jax.Array, cfg: ModelConfig,
                  policy: Policy, *, pos_offset=0) -> jax.Array:
+    """``pos_offset``: scalar, or a (B,) vector giving each batch row its
+    own learned-position offset (continuous-batching decode)."""
     x = jnp.take(params["tok"], tokens, axis=0).astype(policy.compute_dtype)
     if cfg.scale_embeddings:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), policy.compute_dtype)
     if cfg.pos_kind == "learned":
         s = tokens.shape[-1]
-        pos_ids = pos_offset + jnp.arange(s)
+        off = jnp.asarray(pos_offset)
+        # scalar -> (S,); (B,) -> (B, S); both broadcast against (B, S, D)
+        pos_ids = (off[:, None] if off.ndim else off) + jnp.arange(s)
         x = x + jnp.take(params["pos"], pos_ids, axis=0).astype(x.dtype)
     return lshard(x, "batch", "seq", None)

@@ -33,6 +33,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.amp import Policy
+from repro.core.compat import shard_map
 from repro.sharding import EMBED, EXPERTS, FF, current_mesh, current_rules
 from repro.models.layers import trunc_normal
 from repro.utils import ceil_div
@@ -245,7 +246,7 @@ def _moe_replicated(params, x, cfg, policy, capacity_factor, mesh, data_axes):
             aux = jax.lax.pmean(aux, data_axes)
         return out.reshape(xl.shape), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(batch_spec, None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
@@ -299,7 +300,7 @@ def _moe_a2a(params, x, cfg, policy, capacity_factor, mesh, data_axes,
         aux = jax.lax.pmean(aux, data_axes + ("model",))
         return out.reshape(bl, sl, d), aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(batch_spec, "model", None), P(None, None),
                   P("model", None, None), P("model", None, None),

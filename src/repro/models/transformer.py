@@ -183,10 +183,11 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
 def _decode_positions(positions, decode_pos, batch, cfg: ModelConfig):
     if positions is not None:
         return positions
+    p = jnp.asarray(decode_pos).astype(jnp.int32)
+    p = jnp.broadcast_to(p[:, None] if p.ndim else p, (batch, 1))
     if cfg.pos_kind == "mrope":
-        p = jnp.broadcast_to(decode_pos, (3, batch, 1)).astype(jnp.int32)
-        return p
-    return jnp.broadcast_to(decode_pos, (batch, 1)).astype(jnp.int32)
+        return jnp.broadcast_to(p[None], (3, batch, 1))
+    return p
 
 
 def _fit_cache(new_cache, state, cfg):
@@ -350,7 +351,13 @@ def _lm_logits(params, x, cfg: ModelConfig, policy: Policy):
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       cache_dtype=jnp.bfloat16, enc_len: int = 0):
-    """Stacked per-block decode state (pytree of leading-dim n_blocks)."""
+    """Stacked per-block decode state (pytree of leading-dim n_blocks).
+
+    ``pos`` is a (B,) vector: every batch slot owns an independent decode
+    position, so slots can be prefilled/evicted/refilled individually
+    (continuous batching).  Lockstep cohort decode is the special case where
+    all entries advance together.
+    """
     def one_pos(mixer, mlp):
         st = _init_layer_state(cfg, mixer, mlp, batch, max_len, cache_dtype,
                                cross_len=enc_len)
@@ -363,15 +370,22 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
             lambda x: jnp.broadcast_to(x[None], (cfg.n_blocks,) + x.shape),
             st)
         blocks.append(st)
-    return {"pos": jnp.int32(0), "blocks": tuple(blocks)}
+    return {"pos": jnp.zeros((batch,), jnp.int32), "blocks": tuple(blocks)}
 
 
 def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
             state, positions=None, vision_embeds=None, enc_frames=None,
-            moe_impl: str = "a2a"):
+            lengths=None, moe_impl: str = "a2a"):
     """Run the prompt through the model, filling ``state``.
 
     Returns (last_token_logits (B, V), new_state).
+
+    ``lengths``: optional (B,) int32 true prompt lengths for right-padded
+    prompts.  Logits are gathered at position ``lengths-1`` per row and the
+    per-slot decode positions start at ``lengths``; KV written beyond a
+    row's true length is masked out by the decode-time ``kv_len`` until
+    overwritten.  Without ``lengths``, every row uses the full width
+    (the cohort path's left-padded prompts).
     """
     x = L.embed_tokens(params["embed"], tokens, cfg, policy)
     if vision_embeds is not None and cfg.n_vision_tokens:
@@ -394,15 +408,27 @@ def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
         params["blocks"], x, cfg, policy, cfg.block_pattern,
         positions=positions, enc_out=enc_out, states=state["blocks"],
         return_states=True, moe_impl=moe_impl)
-    x = L.apply_norm(params["final_norm"], x[:, -1:], cfg, policy)
-    logits = _lm_logits(params, x, cfg, policy)[:, 0]
-    return logits, {"pos": jnp.int32(tokens.shape[1]),
-                    "blocks": new_block_states}
+    b, s = tokens.shape
+    if lengths is None:
+        x_last = x[:, -1:]
+        new_pos = jnp.full((b,), s, jnp.int32)
+    else:
+        lengths = jnp.asarray(lengths).astype(jnp.int32)
+        x_last = x[jnp.arange(b), lengths - 1][:, None]
+        new_pos = lengths
+    x_last = L.apply_norm(params["final_norm"], x_last, cfg, policy)
+    logits = _lm_logits(params, x_last, cfg, policy)[:, 0]
+    return logits, {"pos": new_pos, "blocks": new_block_states}
 
 
 def decode_step(params, token, state, cfg: ModelConfig, policy: Policy, *,
                 moe_impl: str = "replicated"):
-    """One decode step.  token: (B, 1) int32.  Returns (logits (B,V), state)."""
+    """One decode step.  token: (B, 1) int32.  Returns (logits (B,V), state).
+
+    ``state["pos"]`` is (B,): each slot advances from its own position --
+    ring-buffer writes, kv_len masks and position embeddings are all
+    per-slot, so a batch may mix requests at arbitrary decode depths.
+    """
     pos = state["pos"]
     x = L.embed_tokens(params["embed"], token, cfg, policy, pos_offset=pos)
     enc_out = None  # cross-attn uses the cached cross KV

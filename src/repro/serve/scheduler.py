@@ -1,14 +1,26 @@
-"""Batched request scheduling for serving.
+"""Batched request scheduling for serving: cohort vs continuous batching.
 
-Cohort scheduler: requests queue; the engine takes up to ``batch`` prompts,
-left-pads them to a common prefill length, prefetches the KV state once and
-decodes the whole cohort until every request hits EOS / its token budget.
-Per-request completion is tracked (finished slots keep decoding but their
-outputs are discarded), and utilisation is reported so the cost of cohort
-vs continuous batching is visible.  Continuous per-slot refill needs
-per-slot cache positions and is left as the next serving milestone
-(documented; the cache layout in models/transformer.py already isolates
-slots along the batch axis).
+Two schedulers share a ``Request``/``ServeStats`` vocabulary so their
+utilisation is directly comparable on the same trace:
+
+* ``CohortScheduler`` -- requests queue; the engine takes up to ``batch``
+  prompts, left-pads them to a common prefill length, prefills the KV state
+  once and decodes the whole cohort in lockstep until every request hits
+  EOS / its token budget.  Finished slots keep decoding (their outputs are
+  discarded and counted as ``wasted_slots``), so a single long request
+  holds the whole batch hostage -- the measured cost of NOT refilling.
+
+* ``ContinuousScheduler`` -- the per-slot decode positions introduced in
+  models/transformer.py (``state["pos"]`` is (B,)) let every batch slot run
+  at its own depth.  An admission queue feeds a slot manager: the moment a
+  slot's request hits EOS / budget it is evicted and the slot is refilled
+  via ``serve_step.prefill_into_slot`` -- a single-request prefill scattered
+  into the live cache without disturbing neighbours.  Wasted slots occur
+  only when the admission queue is empty (drain tail / arrival gaps).
+
+Both decode greedily (argmax).  ``Request.arrival_s`` supports replaying a
+Poisson arrival trace (benchmarks/serve_continuous.py); with the default 0.0
+all requests are available immediately.
 """
 from __future__ import annotations
 
@@ -23,6 +35,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.amp import Policy
 from repro.models import transformer as T
+from repro.serve.serve_step import prefill_into_slot
 
 
 @dataclasses.dataclass
@@ -30,16 +43,19 @@ class Request:
     rid: int
     prompt: np.ndarray           # (len,) int32
     max_new_tokens: int = 32
+    arrival_s: float = 0.0       # offset from run start (trace replay)
     output: Optional[np.ndarray] = None
-    latency_s: float = 0.0
+    first_token_s: float = 0.0   # arrival -> first generated token
+    latency_s: float = 0.0       # arrival -> completion
 
 
 @dataclasses.dataclass
 class ServeStats:
     cohorts: int = 0
+    prefills: int = 0
     decode_steps: int = 0
     useful_tokens: int = 0
-    wasted_slots: int = 0        # decode slots spent on finished requests
+    wasted_slots: int = 0        # decode slots spent on finished/empty slots
     wall_s: float = 0.0
 
     @property
@@ -52,7 +68,7 @@ class ServeStats:
         return self.useful_tokens / self.wall_s if self.wall_s else 0.0
 
 
-class CohortScheduler:
+class _SchedulerBase:
     def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
                  batch: int, max_len: int, eos_id: int = -1,
                  pad_id: int = 0, moe_impl: str = "dense"):
@@ -69,6 +85,9 @@ class CohortScheduler:
     def submit(self, req: Request):
         self.queue.append(req)
 
+
+class CohortScheduler(_SchedulerBase):
+    """Lockstep cohorts; latency includes cross-cohort queueing wait."""
     def _pad_prompts(self, reqs: List[Request]):
         plen = max(len(r.prompt) for r in reqs)
         toks = np.full((len(reqs), plen), self.pad_id, np.int32)
@@ -82,14 +101,16 @@ class CohortScheduler:
         while self.queue:
             cohort = self.queue[: self.batch]
             self.queue = self.queue[self.batch:]
-            self._run_cohort(cohort)
+            self._run_cohort(cohort, t0)
             done.extend(cohort)
             self.stats.cohorts += 1
         self.stats.wall_s += time.perf_counter() - t0
         return done
 
-    def _run_cohort(self, real: List[Request]):
-        t0 = time.perf_counter()
+    def _run_cohort(self, real: List[Request], t0: float):
+        # latencies are measured from each request's arrival_s (an offset
+        # from run start), so cross-cohort queueing wait is included and the
+        # numbers are comparable with ContinuousScheduler's
         # pad the cohort to the engine batch with dummy slots (local copy:
         # dummies must not leak into the caller's done-list)
         cohort = list(real)
@@ -97,22 +118,37 @@ class CohortScheduler:
             cohort.append(Request(rid=-1, prompt=cohort[0].prompt,
                                   max_new_tokens=0))
         toks, plen = self._pad_prompts(cohort)
+        budget = max(r.max_new_tokens for r in cohort)
+        assert plen + budget <= self.max_len, \
+            "prompt + max_new_tokens exceeds the cache length"
         state = T.init_decode_state(
             self.cfg, self.batch, self.max_len,
             enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0)
         logits, state = T.prefill(self.params, toks, self.cfg, self.policy,
                                   state=state, moe_impl=self.moe_impl)
         tok = jnp.argmax(logits, -1)[:, None]
-        budget = max(r.max_new_tokens for r in cohort)
         outs = [np.asarray(tok)[:, 0]]
+        t_first = time.perf_counter() - t0
         alive = np.array([r.max_new_tokens > 0 for r in cohort])
         finished_at = np.where(alive, budget, 0)
+        done_at = np.full(self.batch, t_first)
+        for i, r in enumerate(cohort):
+            if alive[i]:
+                r.first_token_s = t_first - r.arrival_s
+                self.stats.useful_tokens += 1  # prefill-produced first token
+                if (self.eos_id >= 0 and outs[0][i] == self.eos_id) or \
+                        r.max_new_tokens == 1:
+                    alive[i] = False
+                    finished_at[i] = 1
         for step in range(1, budget):
+            if not alive.any():
+                break
             logits, state = self._decode(self.params, tok, state)
             tok = jnp.argmax(logits, -1)[:, None]
             col = np.asarray(tok)[:, 0]
             outs.append(col)
             self.stats.decode_steps += 1
+            now = time.perf_counter() - t0
             for i, r in enumerate(cohort):
                 if not alive[i]:
                     self.stats.wasted_slots += 1
@@ -122,13 +158,124 @@ class CohortScheduler:
                         step + 1 >= r.max_new_tokens:
                     alive[i] = False
                     finished_at[i] = step + 1
-            if not alive.any():
-                break
+                    done_at[i] = now
         gen = np.stack(outs, axis=1)  # (B, steps)
-        dt = time.perf_counter() - t0
         for i, r in enumerate(cohort):
             if r.rid < 0:
                 continue
-            r.output = gen[i, : max(int(finished_at[i]), 1)]
-            r.latency_s = dt
-            self.stats.useful_tokens += 1  # the prefill-produced first token
+            n = int(finished_at[i])
+            r.output = gen[i, :n] if n else np.zeros((0,), np.int32)
+            r.latency_s = max(float(done_at[i]) - r.arrival_s, 0.0)
+
+
+class ContinuousScheduler(_SchedulerBase):
+    """Slot-refilling scheduler: evict on EOS/budget, refill immediately.
+
+    ``prefill_len`` is the static right-padded prompt bucket (one
+    compilation serves every refill); prompts longer than the bucket keep
+    their last ``prefill_len`` tokens.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
+                 batch: int, max_len: int, prefill_len: int = 32,
+                 eos_id: int = -1, pad_id: int = 0,
+                 moe_impl: str = "dense"):
+        super().__init__(params, cfg, policy, batch=batch, max_len=max_len,
+                         eos_id=eos_id, pad_id=pad_id, moe_impl=moe_impl)
+        assert prefill_len <= max_len
+        if not all(m.startswith("attn") for m, _ in cfg.block_pattern):
+            raise ValueError(
+                "continuous batching requires attention-only archs: the "
+                "right-padded slot prefill would run pad tokens through a "
+                "recurrent (mamba/rwkv) state")
+        self.prefill_len = prefill_len
+        self._prefill = jax.jit(
+            lambda p, t, l, s, i: prefill_into_slot(
+                p, t, l, s, i, cfg, policy, moe_impl=moe_impl))
+
+    def submit(self, req: Request):
+        need = min(len(req.prompt), self.prefill_len) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new_tokens needs {need} "
+                f"cache slots > max_len {self.max_len} (the ring would "
+                "overwrite the prompt mid-generation)")
+        super().submit(req)
+
+    def _bucket(self, prompt: np.ndarray):
+        """Right-pad (or left-truncate) a prompt to the prefill bucket."""
+        p = self.prefill_len
+        prompt = np.asarray(prompt, np.int32)[-p:]
+        toks = np.full((1, p), self.pad_id, np.int32)
+        toks[0, : len(prompt)] = prompt
+        return jnp.asarray(toks), len(prompt)
+
+    def run(self) -> List[Request]:
+        done: List[Request] = []
+        t0 = time.perf_counter()
+        pending = sorted(self.queue, key=lambda r: r.arrival_s)
+        self.queue = []
+        state = T.init_decode_state(
+            self.cfg, self.batch, self.max_len,
+            enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0)
+        slots: List[Optional[Request]] = [None] * self.batch
+        gens: List[List[int]] = [[] for _ in range(self.batch)]
+        cur = np.zeros((self.batch, 1), np.int32)
+
+        def finish(i: int, now: float):
+            req = slots[i]
+            req.output = np.asarray(gens[i], np.int32)
+            req.latency_s = now - req.arrival_s
+            done.append(req)
+            slots[i] = None
+
+        while pending or any(s is not None for s in slots):
+            now = time.perf_counter() - t0
+            # --- admission: refill every empty slot that has an arrival ---
+            for i in range(self.batch):
+                while slots[i] is None and pending and \
+                        pending[0].arrival_s <= now:
+                    req = pending.pop(0)
+                    if req.max_new_tokens <= 0:
+                        req.output = np.zeros((0,), np.int32)
+                        req.latency_s = max(now - req.arrival_s, 0.0)
+                        done.append(req)
+                        continue
+                    toks, length = self._bucket(req.prompt)
+                    logits, state = self._prefill(
+                        self.params, toks, length, state, i)
+                    tok0 = int(np.argmax(np.asarray(logits)))
+                    self.stats.prefills += 1
+                    self.stats.useful_tokens += 1  # prefill's first token
+                    now = time.perf_counter() - t0
+                    req.first_token_s = now - req.arrival_s
+                    slots[i] = req
+                    gens[i] = [tok0]
+                    cur[i, 0] = tok0
+                    if (self.eos_id >= 0 and tok0 == self.eos_id) or \
+                            req.max_new_tokens == 1:
+                        finish(i, now)  # slot freed: admission loop retries
+            if not any(s is not None for s in slots):
+                if pending:  # idle until the next arrival (no busy-wait)
+                    time.sleep(max(0.0, pending[0].arrival_s -
+                                   (time.perf_counter() - t0)))
+                    continue
+                break
+            # --- one decode step for the whole batch, slots independent ---
+            logits, state = self._decode(self.params, jnp.asarray(cur), state)
+            col = np.asarray(jnp.argmax(logits, -1))
+            self.stats.decode_steps += 1
+            now = time.perf_counter() - t0
+            for i in range(self.batch):
+                if slots[i] is None:
+                    self.stats.wasted_slots += 1
+                    continue
+                self.stats.useful_tokens += 1
+                gens[i].append(int(col[i]))
+                cur[i, 0] = int(col[i])
+                req = slots[i]
+                if (self.eos_id >= 0 and col[i] == self.eos_id) or \
+                        len(gens[i]) >= req.max_new_tokens:
+                    finish(i, now)
+        self.stats.wall_s += time.perf_counter() - t0
+        return done

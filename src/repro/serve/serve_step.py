@@ -107,6 +107,67 @@ def make_decode_step(cfg: ModelConfig, tcfg, mesh: Mesh,
                    donate_argnums=(2,)), st_struct
 
 
+def _cache_geometry(state):
+    """(max_len, cache_dtype, enc_len) recovered from a live decode state."""
+    max_len, cache_dtype, enc_len = 0, jnp.float32, 0
+    for st in state["blocks"]:
+        if "cache" in st:
+            max_len = max(max_len, st["cache"]["k"].shape[2])
+            cache_dtype = st["cache"]["k"].dtype
+        if "cross" in st:
+            enc_len = st["cross"]["k"].shape[2]
+    return max_len, cache_dtype, enc_len
+
+
+def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
+                      policy: Policy, *, moe_impl: str = "dense", **kw):
+    """Prefill ONE request and scatter its KV into live cache slot ``slot``.
+
+    tokens: (1, P) right-padded prompt (P is the static prefill bucket, so
+    one compilation serves every request); length: scalar true prompt
+    length; slot: scalar batch index.  Neighbouring slots' caches, decode
+    positions and recurrent states are untouched -- the whole update is a
+    ``dynamic_update_slice`` along the batch axis, which is what makes
+    evict-and-refill safe mid-decode.
+
+    Returns (next_token_logits (V,), new_state).  jit-stable: ``length`` and
+    ``slot`` are traced scalars, shapes depend only on the bucket width.
+
+    Constraints: P must not exceed the smallest attention-cache length (a
+    sliding-window layer's ring keeps only its last ``window`` positions of
+    a wider prefill, which would drop real tokens of short prompts), and the
+    arch must be attention-only -- ``lengths`` masking covers KV slots, but
+    pad tokens past ``length`` would still advance a recurrent (mamba/rwkv)
+    scan and corrupt the slot's state.
+    """
+    b1, p = tokens.shape
+    assert b1 == 1, "prefill_into_slot takes a single request"
+    assert all(mixer.startswith("attn") for mixer, _ in cfg.block_pattern), \
+        "right-padded slot prefill requires attention-only archs (recurrent" \
+        " state would absorb the pad tokens)"
+    max_len, cache_dtype, enc_len = _cache_geometry(state)
+    for st in state["blocks"]:
+        if "cache" in st:
+            assert p <= st["cache"]["k"].shape[2], \
+                "prefill bucket exceeds a (windowed) cache length"
+    row = T.init_decode_state(cfg, 1, max_len, cache_dtype, enc_len=enc_len)
+    logits, row = T.prefill(
+        params, tokens, cfg, policy, state=row,
+        lengths=jnp.asarray(length).reshape((1,)), moe_impl=moe_impl, **kw)
+    slot = jnp.asarray(slot).astype(jnp.int32)
+
+    def scatter_row(live, new):
+        # block-state leaves are (n_blocks, B, ...): write batch row `slot`
+        return jax.lax.dynamic_update_slice_in_dim(
+            live, new.astype(live.dtype), slot, axis=1)
+
+    blocks = jax.tree_util.tree_map(scatter_row, state["blocks"],
+                                    row["blocks"])
+    pos = jax.lax.dynamic_update_slice(
+        state["pos"], row["pos"].astype(state["pos"].dtype), (slot,))
+    return logits[0], {"pos": pos, "blocks": blocks}
+
+
 def greedy_generate(params, prompt, cfg: ModelConfig, policy: Policy, *,
                     max_new: int = 16, max_len: int = 256,
                     moe_impl: str = "dense"):

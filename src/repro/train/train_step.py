@@ -30,6 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig, TrainConfig
 from repro.core import collectives as C
+from repro.core.compat import shard_map
 from repro.core.amp import (LossScaleState, Policy, make_loss_scale,
                             make_policy)
 from repro.core.grad_accum import accumulate_gradients
@@ -241,7 +242,7 @@ def make_train_step_dp(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
         # check_vma=False: the ppermute-ring / psum_scatter+all_gather
         # strategies produce values that are replicated by construction,
         # which the varying-axes type system cannot verify.
-        fn = jax.shard_map(
+        fn = shard_map(
             step, mesh=mesh,
             in_specs=(jax.tree_util.tree_map(lambda _: P(), state),
                       batch_specs),

@@ -4,6 +4,8 @@ from pathlib import Path
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import (BertExampleConfig, ShardedLoader,

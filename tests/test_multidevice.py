@@ -10,26 +10,25 @@ def test_ring_hierarchical_bucketed_equal_psum():
     out = run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core.compat import make_mesh, shard_map
         from repro.core.collectives import (ring_all_reduce,
                                             hierarchical_psum,
                                             reduce_gradients)
-        mesh = jax.make_mesh((8,), ("d",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((8,), ("d",))
         x = jnp.arange(8 * 37, dtype=jnp.float32).reshape(8, 37)
         ref = jnp.tile(x.sum(0)[None], (8, 1))
-        out = jax.jit(jax.shard_map(lambda x: ring_all_reduce(x, "d"),
+        out = jax.jit(shard_map(lambda x: ring_all_reduce(x, "d"),
                                     mesh=mesh, in_specs=P("d", None),
                                     out_specs=P("d", None)))(x)
         np.testing.assert_allclose(out, ref, rtol=1e-6)
-        mesh2 = jax.make_mesh((2, 4), ("pod", "d"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        out2 = jax.jit(jax.shard_map(
+        mesh2 = make_mesh((2, 4), ("pod", "d"))
+        out2 = jax.jit(shard_map(
             lambda x: hierarchical_psum(x, "d", "pod"), mesh=mesh2,
             in_specs=P(("pod", "d"), None),
             out_specs=P(("pod", "d"), None)))(x)
         np.testing.assert_allclose(out2, ref, rtol=1e-6)
         tree = {"a": x, "b": 2 * x}
-        out3 = jax.jit(jax.shard_map(
+        out3 = jax.jit(shard_map(
             lambda t: reduce_gradients(t, strategy="bucketed",
                                        data_axes=("d",), pod_axis="pod",
                                        bucket_bytes=64),
@@ -49,14 +48,14 @@ def test_moe_expert_parallel_matches_dense():
         from repro.models import moe as M
         from repro.core.amp import make_policy
         from repro.sharding import use_sharding_ctx, make_rules
+        from repro.core.compat import make_mesh
         cfg = smoke_variant(get_config("qwen3-moe-30b-a3b"), d_model=64)
         cfg = dataclasses.replace(cfg, n_experts=8, top_k=2, moe_d_ff=32)
         pol = make_policy("f32")
         params, _ = M.init_moe(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
         dense, _ = M.moe_dense(params, x, cfg, pol)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         cap = float(cfg.n_experts)
         with use_sharding_ctx(mesh, make_rules()):
             for impl in ("a2a", "replicated"):
@@ -89,6 +88,7 @@ def test_dp_strategies_agree_on_real_model():
         from repro.models import api
         from repro.train.train_step import (init_train_state,
                                             make_train_step_dp)
+        from repro.core.compat import make_mesh
         cfg = smoke_variant(get_config("bert-large"), d_model=64)
         shape = InputShape("t", 32, 32, "train")  # 4 per device, accum 2
         batch = api.make_synth_batch(jax.random.PRNGKey(1), cfg, shape)
@@ -99,9 +99,7 @@ def test_dp_strategies_agree_on_real_model():
                 ("ring", (8,), ("data",)),
                 ("bucketed", (8,), ("data",)),
                 ("hierarchical", (2, 4), ("pod", "data"))]:
-            mesh = jax.make_mesh(
-                mesh_shape, axes,
-                axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            mesh = make_mesh(mesh_shape, axes)
             tcfg = TrainConfig(precision="f32", accum_steps=2,
                                collective_strategy=strat, total_steps=10,
                                warmup_steps=1)
@@ -134,8 +132,8 @@ def test_small_mesh_dryrun_lowers():
         from repro.train.train_step import (make_train_step_gspmd,
                                             init_train_state)
         from repro.serve.serve_step import make_decode_step
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("data", "model"))
         rules = make_rules()
         for arch in ("qwen3-moe-30b-a3b", "jamba-1.5-large-398b",
                      "rwkv6-1.6b"):
@@ -172,9 +170,9 @@ def test_pure_dp_zero1_mode():
         from repro.sharding import make_rules
         from repro.train.train_step import (init_train_state,
                                             make_train_step_gspmd)
+        from repro.core.compat import make_mesh
         cfg = smoke_variant(get_config("rwkv6-1.6b"), d_model=128)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         shape = InputShape("t", 32, 8, "train")
         batch = api.make_synth_batch(jax.random.PRNGKey(1), cfg, shape)
         shapes, specs = api.abstract_params(cfg)
@@ -206,12 +204,12 @@ def test_bert_dp_strategies_on_bigger_mesh_ring_multiaxis():
     out = run_multidevice("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.core.compat import make_mesh, shard_map
         from repro.core.collectives import ring_all_reduce
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         x = jnp.arange(8 * 11, dtype=jnp.float32).reshape(8, 11)
         ref = jnp.tile(x.sum(0)[None], (8, 1))
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shard_map(
             lambda x: ring_all_reduce(x, ("data", "model")), mesh=mesh,
             in_specs=P(("data", "model"), None),
             out_specs=P(("data", "model"), None), check_vma=False))(x)
