@@ -22,6 +22,7 @@ MODULES = [
     ("fig8", "benchmarks.fig8_opt_equivalence"),
     ("roofline", "benchmarks.roofline"),
     ("serve", "benchmarks.serve_continuous"),
+    ("serve_paged", "benchmarks.serve_paged"),
 ]
 
 

@@ -12,6 +12,11 @@ config: decode state allocation, prefill fill-in, per-step KV-cache update
 repro/serve/scheduler.py on a synthetic mixed-length workload and report
 slot-utilisation -- continuous batching refills slots the moment a request
 finishes, cohort decodes in lockstep until the longest request drains.
+
+``--cache-mode paged|paged_int8`` (continuous only) swaps the contiguous
+per-slot KV stripes for the global page pool + block tables; ``--num-pages``
+under-provisions the pool to exercise page growth, eviction reuse and
+preemption (the CI paged smoke runs 2 pages per slot).
 """
 import argparse
 import time
@@ -33,7 +38,9 @@ def run_scheduler(args, cfg, pol, params):
     if args.mode == "continuous":
         sched = ContinuousScheduler(
             params, cfg, pol, batch=args.batch, max_len=max_len,
-            prefill_len=min(args.prompt_len, max_len))
+            prefill_len=min(args.prompt_len, max_len),
+            cache_mode=args.cache_mode, page_size=args.page_size,
+            num_pages=args.num_pages)
     else:
         sched = CohortScheduler(params, cfg, pol, batch=args.batch,
                                 max_len=max_len)
@@ -52,6 +59,12 @@ def run_scheduler(args, cfg, pol, params):
     logger.info("slot utilisation %.3f, %.1f tok/s, p50 latency %.3fs",
                 st.slot_utilisation, st.tokens_per_s,
                 float(np.median([r.latency_s for r in done])))
+    if getattr(sched, "allocator", None) is not None:
+        logger.info("paged cache (%s): %d-page pool, %d preemptions, "
+                    "%d pages leaked, %d cache bytes", args.cache_mode,
+                    sched.num_pages - 1, st.preemptions,
+                    sched.allocator.in_use, sched.cache_bytes())
+        assert sched.allocator.in_use == 0, "pages leaked after drain"
 
 
 def main():
@@ -64,6 +77,13 @@ def main():
                     choices=["raw", "cohort", "continuous"])
     ap.add_argument("--requests", type=int, default=12,
                     help="workload size for the scheduler modes")
+    ap.add_argument("--cache-mode", default="contiguous",
+                    choices=["contiguous", "paged", "paged_int8"],
+                    help="KV cache layout (continuous mode only)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page pool size incl. trash page (default: full "
+                         "provisioning); small pools force preemption")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))

@@ -4,9 +4,12 @@
 #   bash scripts/ci.sh            # everything
 #   bash scripts/ci.sh tests      # tier-1 pytest only
 #   bash scripts/ci.sh serve      # 2-device serve example smoke only
+#   bash scripts/ci.sh paged      # paged KV-cache smoke (tiny pool)
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
-# in the decode path surface without accelerators.
+# in the decode path surface without accelerators.  The paged smoke runs the
+# continuous scheduler with 2 pages per slot and a deliberately starved pool
+# so the PageAllocator's grow/evict/reuse/preempt paths run on every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -25,6 +28,16 @@ if [[ "$step" == "all" || "$step" == "serve" ]]; then
         --new-tokens 4 --requests 4
     python examples/serve.py --mode continuous --batch 2 --prompt-len 8 \
         --new-tokens 4 --requests 4
+fi
+
+if [[ "$step" == "all" || "$step" == "paged" ]]; then
+    echo "=== paged serving smoke: 2 pages/slot, starved pool (evict+reuse) ==="
+    # max_len 16 / page 8 -> 2 pages per slot; 3-page pool < 2 slots x 2
+    # pages worst case, 6 requests through 2 slots -> growth, eviction
+    # reuse and (if the pool dries mid-decode) preemption all execute
+    python examples/serve.py --mode continuous --cache-mode paged_int8 \
+        --batch 2 --prompt-len 8 --new-tokens 8 --requests 6 \
+        --page-size 8 --num-pages 4
 fi
 
 echo "CI OK"

@@ -2,6 +2,8 @@
 #   bias_gelu.py        -- the paper's own 7-kernels->1 GELU fusion example
 #   layernorm.py        -- fused LayerNorm (one HBM pass)
 #   flash_attention.py  -- attention without materialised S^2 scores
+#   paged_attention.py  -- paged single-token decode (block-table DMA,
+#                          online softmax, fused int8 dequant)
 #   lamb_update.py      -- fused LAMB moment update (APEX fused-LAMB analogue)
 # ops.py = jit'd wrappers with impl dispatch; ref.py = pure-jnp oracles.
 from repro.kernels import ops  # noqa: F401

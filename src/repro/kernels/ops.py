@@ -88,6 +88,27 @@ def _flash_vjp(causal, window, softcap, block_q, block_k, interpret):
     return fn
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_table, kv_len, *,
+                           k_scale=None, v_scale=None, softcap: float = 0.0,
+                           impl: Optional[str] = None):
+    """Paged single-token decode attention over a page pool + block table.
+
+    q: (B, H, Dh); pages: (P, page_size, KV, Dh); block_table: (B, max_pages)
+    int32; kv_len: (B,).  ``k_scale``/``v_scale`` (P, KV) mark int8 pages
+    (dequant fused into the kernel's KV load).  Returns (B, H, Dh).
+    """
+    impl = impl or default_impl()
+    if impl == "jnp":
+        return ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, block_table, kv_len,
+            k_scale=k_scale, v_scale=v_scale, softcap=softcap)
+    from repro.kernels import paged_attention as _pa
+    return _pa.paged_decode_attention(
+        q, k_pages, v_pages, block_table, kv_len,
+        k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        interpret=(impl == "pallas_interpret"))
+
+
 def wkv6(r, k, v, logw, u, s0, *, chunk: int = 64,
          impl: Optional[str] = None):
     """RWKV-6 recurrence.  jnp impl = models.rwkv.wkv6_chunked (same math,

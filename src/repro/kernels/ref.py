@@ -42,6 +42,43 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pages, v_pages, block_table, kv_len, *,
+                               k_scale=None, v_scale=None,
+                               softcap: float = 0.0) -> jax.Array:
+    """Paged single-token decode attention (oracle for paged_attention.py).
+
+    q: (B, H, Dh) -- one new token per batch slot.
+    k_pages/v_pages: (P, page_size, KV, Dh) global page pool; when
+    ``k_scale``/``v_scale`` (P, KV) are given the pool is int8 and entries
+    dequantise as ``int * scale[page, kv_head]``.
+    block_table: (B, max_pages) int32 page ids per slot (page 0 is the
+    trash page -- entries past a slot's live pages may point there).
+    kv_len: (B,) valid token counts; tokens at flat index >= kv_len are
+    masked out, so trash/garbage pages never contribute.
+    """
+    b, h, dh = q.shape
+    _, ps, kvh, _ = k_pages.shape
+    mp = block_table.shape[1]
+    g = h // kvh
+    k = k_pages[block_table].astype(jnp.float32)      # (B, mp, ps, KV, Dh)
+    v = v_pages[block_table].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale[block_table][:, :, None, :, None]
+        v = v * v_scale[block_table][:, :, None, :, None]
+    k = k.reshape(b, mp * ps, kvh, dh)
+    v = v.reshape(b, mp * ps, kvh, dh)
+    qg = q.astype(jnp.float32).reshape(b, kvh, g, dh)
+    logits = jnp.einsum("bvgd,bkvd->bvgk", qg, k) / math.sqrt(dh)
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    mask = jnp.arange(mp * ps)[None] < jnp.asarray(kv_len)[:, None]
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked (empty) slots
+    out = jnp.einsum("bvgk,bkvd->bvgd", p, v)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
 def lamb_moments_ref(w, g, m, v, *, b1=0.9, b2=0.999, eps=1e-6, wd=0.01,
                      step=1):
     """Fused LAMB moment update + unnormalised update direction."""

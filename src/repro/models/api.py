@@ -183,6 +183,15 @@ def state_logical_axes(cfg: ModelConfig, state_tree) -> Any:
         nd = len(leaf.shape)
         if "pos" in names:
             return (BATCH,)[:nd]  # (B,) per-slot decode positions
+        # paged caches: block tables are gathered host-side by page id, so
+        # the pool is replicated apart from the kv-head axis; tables follow
+        # the batch axis like every other per-slot leaf
+        if "k_pages" in names or "v_pages" in names:
+            return (LAYERS, None, None, KV_HEADS, None)[:nd]
+        if "block_table" in names:
+            return (LAYERS, BATCH, None)[:nd]
+        if "k_scale" in names or "v_scale" in names:
+            return (LAYERS, None, KV_HEADS)[:nd]
         if "cache" in names or "cross" in names:
             return (LAYERS, BATCH, KV_SEQ, KV_HEADS, None)[:nd]
         if "conv" in names:

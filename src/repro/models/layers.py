@@ -440,6 +440,10 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
     at ``cache_pos`` (ring-buffer index) and attends over ``kv_len`` valid
     slots.  ``cache_pos``/``kv_len`` may be scalars (lockstep cohort decode)
     or (B,) vectors (continuous batching: each slot at its own position).
+    A *paged* cache ({"k_pages", "v_pages", "block_table"[, "k_scale",
+    "v_scale"]}, see ``init_paged_attention_cache``) routes the decode write
+    through ``block_table[slot, pos // page_size]`` and attends via the
+    paged-decode kernel instead of ``naive_attention``.
     ``static_kv``: cross-attention -- KV come from ``kv_source``
     (prefill) or verbatim from ``cache`` (decode); never updated in place.
     """
@@ -493,14 +497,60 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
             new_cache = {"k": k, "v": v} if kv_source is not None else cache
         out = naive_attention(q, k, v, causal=False, softcap=softcap,
                               reduce_dtype=policy.reduce_dtype)
+    elif cache is not None and "k_pages" in cache:
+        # paged decode: scatter the new token into the page that
+        # block_table[slot, pos // page_size] names, then attend the slot's
+        # pages through the block table (Pallas kernel or jnp reference)
+        assert s == 1, "paged cache implies single-token decode"
+        page_size = cache["k_pages"].shape[1]
+        max_pages = cache["block_table"].shape[1]
+        capacity = max_pages * page_size
+        cpos = jnp.asarray(cache_pos)
+        if not cpos.ndim:
+            cpos = jnp.broadcast_to(cpos, (b,))
+        # paged caches have no ring semantics: writes past capacity (an
+        # over-driven or empty slot) land on the trash page, never on a
+        # live page -- kv_len below caps at capacity either way
+        page_idx = jnp.minimum(cpos // page_size, max_pages - 1)
+        page_ids = jnp.where(cpos < capacity,
+                             cache["block_table"][jnp.arange(b), page_idx], 0)
+        slot_in_page = cpos % page_size
+        new_c = dict(cache)
+        if "k_scale" in cache:  # int8 pages: requantising append
+            new_c["k_pages"], new_c["k_scale"] = _paged_token_write_quant(
+                cache["k_pages"], cache["k_scale"], page_ids, slot_in_page,
+                k[:, 0])
+            new_c["v_pages"], new_c["v_scale"] = _paged_token_write_quant(
+                cache["v_pages"], cache["v_scale"], page_ids, slot_in_page,
+                v[:, 0])
+        else:
+            idx = page_ids * page_size + slot_in_page
+            new_c["k_pages"] = _flat_row_write(cache["k_pages"], idx, k[:, 0])
+            new_c["v_pages"] = _flat_row_write(cache["v_pages"], idx, v[:, 0])
+        if return_cache:
+            new_cache = new_c
+        if kv_len is None:
+            kv_len = jnp.minimum(cpos + 1, capacity)
+        from repro.kernels import ops as kops
+        out = kops.paged_decode_attention(
+            q[:, 0], new_c["k_pages"], new_c["v_pages"],
+            new_c["block_table"], kv_len,
+            k_scale=new_c.get("k_scale"), v_scale=new_c.get("v_scale"),
+            softcap=softcap, impl=attention_impl())[:, None]
     elif cache is not None:
         # decode: write new kv at ring index cache_pos, attend kv_len slots
         ck, cv = cache["k"], cache["v"]
         cpos = jnp.asarray(cache_pos)
         if cpos.ndim:  # (B,) per-slot ring indices: scatter one row each
             assert s == 1, "per-slot cache_pos implies single-token decode"
-            ck = ck.at[jnp.arange(b), cpos].set(k[:, 0].astype(ck.dtype))
-            cv = cv.at[jnp.arange(b), cpos].set(v[:, 0].astype(cv.dtype))
+            # an un-wrapped cpos >= cache_len must stay a dropped write (the
+            # pre-refactor .at[b, pos] OOB semantics), not alias into the
+            # next slot's stripe through the flattened index
+            idx = jnp.where(cpos < ck.shape[1],
+                            jnp.arange(b) * ck.shape[1] + cpos,
+                            b * ck.shape[1])
+            ck = _flat_row_write(ck, idx, k[:, 0])
+            cv = _flat_row_write(cv, idx, v[:, 0])
         else:
             ck = jax.lax.dynamic_update_slice(
                 ck, k.astype(ck.dtype), (0, cpos, 0, 0))
@@ -509,7 +559,9 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
         if return_cache:
             new_cache = {"k": ck, "v": cv}
         if kv_len is None:
-            kv_len = cpos + s
+            # clamp: a prompt of exactly cache_len tokens leaves cpos + s one
+            # past the extent -- the ring holds at most cache_len valid slots
+            kv_len = jnp.minimum(cpos + s, ck.shape[1])
         # no causal/window masks: the ring buffer's kv_len IS the window
         out = naive_attention(q, ck, cv, causal=False, window=0,
                               softcap=softcap, q_offset=0,
@@ -546,6 +598,117 @@ def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                          dtype=jnp.bfloat16) -> dict:
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache: global page pool + per-slot block tables
+# ---------------------------------------------------------------------------
+
+def init_paged_attention_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                               page_size: int, max_pages: int,
+                               dtype=jnp.bfloat16,
+                               quantized: bool = False) -> dict:
+    """Page-pool cache: ``k_pages``/``v_pages`` (P, page_size, KV, Dh) plus a
+    per-slot ``block_table`` (B, max_pages).  Page 0 is the *trash page*:
+    every block-table entry starts there, so decode writes from empty or
+    not-yet-grown slots land in a page nothing ever reads (``kv_len`` masks
+    it) instead of corrupting live requests.  ``quantized`` stores pages as
+    int8 with per-(page, kv-head) scales dequantised inside the kernel."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    store = jnp.int8 if quantized else dtype
+    cache = {
+        "k_pages": jnp.zeros((num_pages, page_size, kv, dh), store),
+        "v_pages": jnp.zeros((num_pages, page_size, kv, dh), store),
+        "block_table": jnp.zeros((batch, max_pages), jnp.int32),
+    }
+    if quantized:
+        cache["k_scale"] = jnp.zeros((num_pages, kv), jnp.float32)
+        cache["v_scale"] = jnp.zeros((num_pages, kv), jnp.float32)
+    return cache
+
+
+def quantize_pages(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (N, page_size, KV, Dh) float -> (int8 pages, (N, KV) scales).
+    Symmetric per-(page, kv-head) quantisation: scale = amax / 127."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(1, 3))                  # (N, KV)
+    scale = amax / 127.0
+    q = jnp.round(xf / jnp.maximum(scale, 1e-20)[:, None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale
+
+
+def _flat_row_write(buf, row_idx, tok):
+    """Scatter tok (B, ...) at ``row_idx`` with buf's first two dims
+    collapsed: one index level lowers to a row-granular scatter, ~2.5x
+    faster on CPU decode than the 2-level ``.at[i, j].set``."""
+    flat = buf.reshape((-1,) + buf.shape[2:])
+    flat = flat.at[row_idx].set(tok.astype(buf.dtype))
+    return flat.reshape(buf.shape)
+
+
+def _paged_token_write_quant(pages, scales, page_ids, slot_in_page, token):
+    """Append one token per batch slot into its int8 page.  When a token's
+    amax exceeds the page's current scale the resident ints are requantised
+    to the grown scale (ratio 1.0 -- the common case -- is exact).  A write
+    at page slot 0 means the page has no live residents (pages fill in
+    order), so the scale RESTARTS from this token's amax -- a recycled page
+    must not quantise its new occupant at the previous request's scale."""
+    b = token.shape[0]
+    tf = token.astype(jnp.float32)                            # (B, KV, Dh)
+    amax = jnp.max(jnp.abs(tf), axis=-1)                      # (B, KV)
+    old = scales[page_ids]
+    fresh = (slot_in_page == 0)[:, None]                      # (B, 1)
+    new = jnp.where(fresh, amax / 127.0,
+                    jnp.maximum(old, amax / 127.0))
+    ratio = jnp.where(new > 0, old / jnp.maximum(new, 1e-20), 0.0)
+    page = pages[page_ids].astype(jnp.float32)                # (B, ps, KV, Dh)
+    page = jnp.round(page * ratio[:, None, :, None])
+    qtok = jnp.round(tf / jnp.maximum(new, 1e-20)[..., None])
+    page = page.at[jnp.arange(b), slot_in_page].set(qtok)
+    page = jnp.clip(page, -127, 127).astype(jnp.int8)
+    return pages.at[page_ids].set(page), scales.at[page_ids].set(new)
+
+
+def paged_prefill_write(pcache: dict, k: jax.Array, v: jax.Array,
+                        valid_len=None) -> dict:
+    """Write whole-batch contiguous prefill KV (B, S, KV, Dh) into the page
+    pool through each row's block table.  S is padded up to whole pages; pad
+    positions are masked by ``kv_len`` at read time, and unallocated
+    block-table entries scatter into the trash page (page 0).
+
+    ``valid_len`` (B,): true prompt lengths of right-padded rows.  Pad-token
+    KV past a row's length is zeroed before storage -- it is dead at read
+    time either way, but for int8 pools it would otherwise inflate the
+    per-(page, head) amax and permanently coarsen the page's scale."""
+    ps = pcache["k_pages"].shape[1]
+    mp = pcache["block_table"].shape[1]
+    b, s = k.shape[:2]
+    if valid_len is not None:
+        keep = jnp.arange(s)[None] < jnp.asarray(valid_len)[:, None]
+        k = jnp.where(keep[..., None, None], k, 0)
+        v = jnp.where(keep[..., None, None], v, 0)
+    n = -(-s // ps)                       # pages covered by the prefill
+    assert n <= mp, f"prefill width {s} exceeds paged capacity {mp * ps}"
+    pad = n * ps - s
+    if pad:
+        cfgpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, cfgpad), jnp.pad(v, cfgpad)
+    kr = k.reshape(b * n, ps, *k.shape[2:])
+    vr = v.reshape(b * n, ps, *v.shape[2:])
+    pids = pcache["block_table"][:, :n].reshape(-1)           # (B*n,)
+    out = dict(pcache)
+    if "k_scale" in pcache:
+        qk, sk = quantize_pages(kr)
+        qv, sv = quantize_pages(vr)
+        out["k_pages"] = pcache["k_pages"].at[pids].set(qk)
+        out["v_pages"] = pcache["v_pages"].at[pids].set(qv)
+        out["k_scale"] = pcache["k_scale"].at[pids].set(sk)
+        out["v_scale"] = pcache["v_scale"].at[pids].set(sv)
+    else:
+        dt = pcache["k_pages"].dtype
+        out["k_pages"] = pcache["k_pages"].at[pids].set(kr.astype(dt))
+        out["v_pages"] = pcache["v_pages"].at[pids].set(vr.astype(dt))
+    return out
 
 
 # ---------------------------------------------------------------------------

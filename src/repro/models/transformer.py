@@ -32,6 +32,19 @@ from repro.models import rwkv as RW
 Params = Any
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Geometry of a paged KV cache (see layers.init_paged_attention_cache).
+
+    ``num_pages`` counts the global pool *including* the reserved trash page
+    0; per-slot capacity is ``ceil(max_len / page_size)`` block-table entries.
+    ``quantized`` stores pages as int8 with per-(page, kv-head) scales.
+    """
+    page_size: int
+    num_pages: int
+    quantized: bool = False
+
+
 # ---------------------------------------------------------------------------
 # Per-layer init
 # ---------------------------------------------------------------------------
@@ -73,13 +86,23 @@ def _init_layer(key, cfg: ModelConfig, mixer: str, mlp: str,
 
 
 def _init_layer_state(cfg: ModelConfig, mixer: str, mlp: str, batch: int,
-                      cache_len: int, cache_dtype, cross_len: int = 0):
+                      cache_len: int, cache_dtype, cross_len: int = 0,
+                      paged: Optional[PagedCacheConfig] = None):
     st = {}
     if mixer.startswith("attn"):
-        eff_len = cache_len
-        if mixer == "attn_local" and cfg.sliding_window:
-            eff_len = min(cache_len, cfg.sliding_window)
-        st["cache"] = L.init_attention_cache(cfg, batch, eff_len, cache_dtype)
+        if paged is not None:
+            assert mixer == "attn", \
+                "paged KV cache: sliding-window ring layers unsupported"
+            max_pages = -(-cache_len // paged.page_size)
+            st["cache"] = L.init_paged_attention_cache(
+                cfg, batch, paged.num_pages, paged.page_size, max_pages,
+                dtype=cache_dtype, quantized=paged.quantized)
+        else:
+            eff_len = cache_len
+            if mixer == "attn_local" and cfg.sliding_window:
+                eff_len = min(cache_len, cfg.sliding_window)
+            st["cache"] = L.init_attention_cache(cfg, batch, eff_len,
+                                                 cache_dtype)
         if cross_len:
             st["cross"] = L.init_attention_cache(cfg, batch, cross_len,
                                                  cache_dtype)
@@ -100,7 +123,7 @@ def _init_layer_state(cfg: ModelConfig, mixer: str, mlp: str, batch: int,
 def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
                  mlp: str, *, positions=None, enc_out=None, state=None,
                  decode_pos=None, return_state: bool = False,
-                 moe_impl: str = "a2a"):
+                 moe_impl: str = "a2a", valid_len=None):
     new_state = {} if return_state else None
     aux = jnp.float32(0.0)
 
@@ -114,8 +137,16 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
     if mixer.startswith("attn"):
         cache = state.get("cache") if state is not None else None
         if cache is not None and decode_pos is not None:
-            cache_len = cache["k"].shape[1]
-            write_pos = jnp.mod(decode_pos, cache_len)
+            if "k_pages" in cache:  # paged: capacity = table width x page
+                cache_len = (cache["block_table"].shape[-1] *
+                             cache["k_pages"].shape[1])
+                # no ring wrap: a paged write past capacity is routed to the
+                # trash page inside apply_attention (a wrapped index would
+                # land at page slot 0 and reset a live page's int8 scale)
+                write_pos = decode_pos
+            else:
+                cache_len = cache["k"].shape[1]
+                write_pos = jnp.mod(decode_pos, cache_len)
             kv_len = jnp.minimum(decode_pos + 1, cache_len)
             y, nc = L.apply_attention(
                 p["mixer"], h, cfg, policy, mixer_kind="attn",
@@ -131,8 +162,7 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
                 p["mixer"], h, cfg, policy, mixer_kind=mixer,
                 positions=positions, return_cache=return_state)
             if return_state:
-                cache_len = state["cache"]["k"].shape[1] if state else None
-                new_state["cache"] = _fit_cache(nc, state, cfg)
+                new_state["cache"] = _fit_cache(nc, state, cfg, valid_len)
     elif mixer == "mamba":
         mst = ({"conv": state["conv"], "ssm": state["ssm"]}
                if state is not None and "conv" in state else None)
@@ -190,10 +220,15 @@ def _decode_positions(positions, decode_pos, batch, cfg: ModelConfig):
     return p
 
 
-def _fit_cache(new_cache, state, cfg):
+def _fit_cache(new_cache, state, cfg, valid_len=None):
     """Prefill wrote a seq-length cache; pad/copy into the allocated slots."""
     if new_cache is None or state is None or "cache" not in state:
         return new_cache
+    if "k_pages" in state["cache"]:
+        # paged state: scatter the contiguous prefill KV into each row's
+        # pages through its block table (trash page absorbs the overflow)
+        return L.paged_prefill_write(state["cache"], new_cache["k"],
+                                     new_cache["v"], valid_len=valid_len)
     tgt = state["cache"]["k"].shape[1]
     out = {}
     for key in ("k", "v"):
@@ -267,7 +302,7 @@ def init_model(key, cfg: ModelConfig):
 def _run_blocks(params_blocks, x, cfg: ModelConfig, policy: Policy, pattern,
                 *, positions=None, enc_out=None, states=None,
                 decode_pos=None, return_states: bool = False,
-                moe_impl: str = "a2a", remat: bool = False):
+                moe_impl: str = "a2a", remat: bool = False, valid_len=None):
     """Scan over stacked blocks.  states mirrors params_blocks structure."""
     npos = len(pattern)
 
@@ -283,7 +318,8 @@ def _run_blocks(params_blocks, x, cfg: ModelConfig, policy: Policy, pattern,
             x, ns, aux = _apply_layer(
                 bp[i], x, cfg, policy, mixer, mlp, positions=positions,
                 enc_out=enc_out, state=st, decode_pos=decode_pos,
-                return_state=return_states, moe_impl=moe_impl)
+                return_state=return_states, moe_impl=moe_impl,
+                valid_len=valid_len)
             new_states.append(ns)
         out = tuple(new_states) if return_states else None
         return (x, aux_acc + aux), out
@@ -350,17 +386,22 @@ def _lm_logits(params, x, cfg: ModelConfig, policy: Policy):
 # ---------------------------------------------------------------------------
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      cache_dtype=jnp.bfloat16, enc_len: int = 0):
+                      cache_dtype=jnp.bfloat16, enc_len: int = 0,
+                      paged: Optional[PagedCacheConfig] = None):
     """Stacked per-block decode state (pytree of leading-dim n_blocks).
 
     ``pos`` is a (B,) vector: every batch slot owns an independent decode
     position, so slots can be prefilled/evicted/refilled individually
     (continuous batching).  Lockstep cohort decode is the special case where
     all entries advance together.
+
+    ``paged``: replace each contiguous per-slot (max_len, KV, Dh) stripe with
+    the global page pool + block tables from ``PagedCacheConfig`` -- HBM then
+    scales with pages provisioned, not batch x worst-case length.
     """
     def one_pos(mixer, mlp):
         st = _init_layer_state(cfg, mixer, mlp, batch, max_len, cache_dtype,
-                               cross_len=enc_len)
+                               cross_len=enc_len, paged=paged)
         return st
 
     blocks = []
@@ -371,6 +412,29 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
             st)
         blocks.append(st)
     return {"pos": jnp.zeros((batch,), jnp.int32), "blocks": tuple(blocks)}
+
+
+def set_block_tables(state, rows, slot=None):
+    """Write page-id rows into every attention layer's stacked block table.
+
+    rows: (B, max_pages) for the whole batch, or (max_pages,) for one
+    ``slot``.  Layers share a single logical allocation per slot, so the
+    same row serves every layer (the tables are stacked (n_blocks, B, mp)).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    blocks = []
+    for st in state["blocks"]:
+        if "cache" in st and "block_table" in st["cache"]:
+            c = dict(st["cache"])
+            bt = c["block_table"]
+            if slot is None:
+                c["block_table"] = jnp.broadcast_to(
+                    rows[None], bt.shape).astype(jnp.int32)
+            else:
+                c["block_table"] = bt.at[:, slot, :].set(rows)
+            st = dict(st, cache=c)
+        blocks.append(st)
+    return dict(state, blocks=tuple(blocks))
 
 
 def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
@@ -407,7 +471,7 @@ def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
     x, aux, new_block_states = _run_blocks(
         params["blocks"], x, cfg, policy, cfg.block_pattern,
         positions=positions, enc_out=enc_out, states=state["blocks"],
-        return_states=True, moe_impl=moe_impl)
+        return_states=True, moe_impl=moe_impl, valid_len=lengths)
     b, s = tokens.shape
     if lengths is None:
         x_last = x[:, -1:]

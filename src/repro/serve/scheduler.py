@@ -21,6 +21,13 @@ utilisation is directly comparable on the same trace:
 Both decode greedily (argmax).  ``Request.arrival_s`` supports replaying a
 Poisson arrival trace (benchmarks/serve_continuous.py); with the default 0.0
 all requests are available immediately.
+
+``ContinuousScheduler`` additionally supports a paged / int8 KV cache
+(``cache_mode="paged"`` / ``"paged_int8"``): a ``PageAllocator`` free-list
+hands out pages from a global pool at admission, slots grow page-by-page
+during decode, and eviction returns pages -- admission capacity becomes
+pages-available rather than slots x max_len
+(benchmarks/serve_paged.py measures the trade).
 """
 from __future__ import annotations
 
@@ -56,7 +63,10 @@ class ServeStats:
     decode_steps: int = 0
     useful_tokens: int = 0
     wasted_slots: int = 0        # decode slots spent on finished/empty slots
+    preemptions: int = 0         # paged: slots evicted to reclaim pages
     wall_s: float = 0.0
+    decode_s: float = 0.0        # time inside decode steps (post-compile)
+    decode_tokens: int = 0       # useful tokens those steps produced
 
     @property
     def slot_utilisation(self) -> float:
@@ -66,6 +76,64 @@ class ServeStats:
     @property
     def tokens_per_s(self) -> float:
         return self.useful_tokens / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def decode_tokens_per_s(self) -> float:
+        """Steady-state decode throughput: tokens produced per second of
+        decode-step time, excluding the compile-bearing first step (the
+        cache-layout comparison benchmarks/serve_paged.py is built on)."""
+        return self.decode_tokens / self.decode_s if self.decode_s else 0.0
+
+
+class PageAllocator:
+    """Free-list allocator over a global KV-cache page pool.
+
+    Page 0 is reserved as the *trash page* (empty slots' block-table entries
+    point there so stray decode writes never corrupt live data), so ids
+    ``1..num_pages-1`` circulate.  ``alloc`` is all-or-nothing: it returns
+    None rather than a partial allocation.  Double-frees and foreign pages
+    raise -- the invariant the stress test leans on.
+    """
+
+    def __init__(self, num_pages: int):
+        assert num_pages >= 2, "pool needs the trash page plus one real page"
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._live: set = set()
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._live)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._live.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._live:
+                raise ValueError(f"double free or foreign page id {p}")
+            self._live.remove(p)
+            self._free.append(p)
+
+
+def kv_cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
+                   paged=None, cache_dtype=jnp.bfloat16) -> int:
+    """Bytes of self-attention KV cache state (pages/tables/scales for paged,
+    the (B, max_len) stripes for contiguous) -- computed via eval_shape."""
+    st = jax.eval_shape(lambda: T.init_decode_state(
+        cfg, batch, max_len, cache_dtype, paged=paged))
+    return sum(
+        leaf.size * jnp.dtype(leaf.dtype).itemsize
+        for blk in st["blocks"] if "cache" in blk
+        for leaf in jax.tree_util.tree_leaves(blk["cache"]))
 
 
 class _SchedulerBase:
@@ -143,11 +211,16 @@ class CohortScheduler(_SchedulerBase):
         for step in range(1, budget):
             if not alive.any():
                 break
+            n_active = int(alive.sum())
+            t_step = time.perf_counter()
             logits, state = self._decode(self.params, tok, state)
             tok = jnp.argmax(logits, -1)[:, None]
             col = np.asarray(tok)[:, 0]
             outs.append(col)
             self.stats.decode_steps += 1
+            if self.stats.decode_steps > 1:  # first step bears the compile
+                self.stats.decode_s += time.perf_counter() - t_step
+                self.stats.decode_tokens += n_active
             now = time.perf_counter() - t0
             for i, r in enumerate(cohort):
                 if not alive[i]:
@@ -174,12 +247,30 @@ class ContinuousScheduler(_SchedulerBase):
     ``prefill_len`` is the static right-padded prompt bucket (one
     compilation serves every refill); prompts longer than the bucket keep
     their last ``prefill_len`` tokens.
+
+    ``cache_mode`` selects the KV cache layout:
+
+    * ``"contiguous"`` -- every slot owns a (max_len, KV, Dh) stripe (PR 1).
+    * ``"paged"`` / ``"paged_int8"`` -- a global page pool + per-slot block
+      tables (+ int8 pages with per-(page, head) scales).  Admission takes
+      ``ceil((prompt+1)/page_size)`` pages from a ``PageAllocator``, decode
+      grows a slot one page at a time as it crosses page boundaries, and
+      EOS/budget eviction returns the pages.  Capacity is therefore
+      pages-available, not slots x max_len: the pool (``num_pages``) may be
+      provisioned well below ``batch * max_len / page_size``.  If the pool
+      runs dry mid-decode the most recently admitted slot is *preempted* --
+      its pages are freed and the request re-queued with its generated
+      tokens folded into the prompt (counted in ``stats.preemptions``;
+      tokens already emitted are kept and re-prefilled, though tokens beyond
+      the prefill bucket are truncated like any long prompt).
     """
 
     def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
                  batch: int, max_len: int, prefill_len: int = 32,
                  eos_id: int = -1, pad_id: int = 0,
-                 moe_impl: str = "dense"):
+                 moe_impl: str = "dense", cache_mode: str = "contiguous",
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 cache_dtype=jnp.bfloat16):
         super().__init__(params, cfg, policy, batch=batch, max_len=max_len,
                          eos_id=eos_id, pad_id=pad_id, moe_impl=moe_impl)
         assert prefill_len <= max_len
@@ -188,7 +279,35 @@ class ContinuousScheduler(_SchedulerBase):
                 "continuous batching requires attention-only archs: the "
                 "right-padded slot prefill would run pad tokens through a "
                 "recurrent (mamba/rwkv) state")
+        if cache_mode not in ("contiguous", "paged", "paged_int8"):
+            raise ValueError(f"unknown cache_mode {cache_mode!r}")
+        if cache_mode != "contiguous" and not all(
+                m == "attn" for m, _ in cfg.block_pattern):
+            raise ValueError("paged KV cache requires full-attention layers "
+                             "(sliding-window rings cannot be paged)")
         self.prefill_len = prefill_len
+        self.cache_mode = cache_mode
+        self.cache_dtype = cache_dtype
+        self.page_size = page_size
+        self.max_pages = -(-max_len // page_size)      # table width per slot
+        if cache_mode == "contiguous":
+            self.num_pages = 0
+            self.paged_cfg = None
+            self.allocator = None
+        else:
+            # default: full provisioning (every slot can hold max_len) plus
+            # the trash page; benchmarks pass a smaller pool to trade HBM
+            # for (rare) preemptions
+            self.num_pages = (num_pages if num_pages is not None
+                              else 1 + batch * self.max_pages)
+            self.paged_cfg = T.PagedCacheConfig(
+                page_size=page_size, num_pages=self.num_pages,
+                quantized=(cache_mode == "paged_int8"))
+            self.allocator = PageAllocator(self.num_pages)
+        # rids whose decode was restarted by a preemption (their outputs
+        # legitimately diverge from an uninterrupted run: the re-prefill
+        # buckets prompt+generated, truncating beyond prefill_len)
+        self.preempted_rids: set = set()
         self._prefill = jax.jit(
             lambda p, t, l, s, i: prefill_into_slot(
                 p, t, l, s, i, cfg, policy, moe_impl=moe_impl))
@@ -200,7 +319,26 @@ class ContinuousScheduler(_SchedulerBase):
                 f"request {req.rid}: prompt+max_new_tokens needs {need} "
                 f"cache slots > max_len {self.max_len} (the ring would "
                 "overwrite the prompt mid-generation)")
+        if self.allocator is not None:
+            worst = -(-need // self.page_size)
+            if worst > self.num_pages - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs {worst} pages > pool "
+                    f"{self.num_pages - 1} (can never be scheduled)")
         super().submit(req)
+
+    def cache_bytes(self) -> int:
+        """Self-attention KV cache footprint for this scheduler's geometry."""
+        return kv_cache_bytes(self.cfg, self.batch, self.max_len,
+                              paged=self.paged_cfg,
+                              cache_dtype=self.cache_dtype)
+
+    def _write_table_row(self, state, slot: int, pages: List[int]):
+        """Mirror a slot's host-side page list into the device block tables
+        (unallocated tail entries point at the trash page)."""
+        row = np.zeros((self.max_pages,), np.int32)
+        row[:len(pages)] = pages
+        return T.set_block_tables(state, row, slot=slot)
 
     def _bucket(self, prompt: np.ndarray):
         """Right-pad (or left-truncate) a prompt to the prefill bucket."""
@@ -216,18 +354,55 @@ class ContinuousScheduler(_SchedulerBase):
         pending = sorted(self.queue, key=lambda r: r.arrival_s)
         self.queue = []
         state = T.init_decode_state(
-            self.cfg, self.batch, self.max_len,
-            enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0)
+            self.cfg, self.batch, self.max_len, self.cache_dtype,
+            enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0,
+            paged=self.paged_cfg)
         slots: List[Optional[Request]] = [None] * self.batch
         gens: List[List[int]] = [[] for _ in range(self.batch)]
+        # output tokens generated before a preemption, keyed by slot / rid
+        prefix: List[List[int]] = [[] for _ in range(self.batch)]
+        # rid -> (prompt incl. generated tokens, remaining budget, output
+        # prefix): preemption state lives here, NEVER mutated into the
+        # caller's Request objects
+        resume: dict = {}
         cur = np.zeros((self.batch, 1), np.int32)
+        slot_pages: List[List[int]] = [[] for _ in range(self.batch)]
+        slot_prompt: List[Optional[np.ndarray]] = [None] * self.batch
+        slot_budget: List[int] = [0] * self.batch
+        kv_next: List[int] = [0] * self.batch   # next cache write index
+        admit_seq: List[int] = [0] * self.batch
+        seq = 0
+
+        def release(i: int):
+            nonlocal state
+            slots[i] = None
+            prefix[i] = []
+            if self.allocator is not None:
+                if slot_pages[i]:
+                    self.allocator.free(slot_pages[i])
+                    slot_pages[i] = []
+                # point the empty slot's table back at the trash page so its
+                # dead decode writes cannot land in recycled pages
+                state = self._write_table_row(state, i, [])
 
         def finish(i: int, now: float):
             req = slots[i]
-            req.output = np.asarray(gens[i], np.int32)
+            req.output = np.asarray(prefix[i] + gens[i], np.int32)
             req.latency_s = now - req.arrival_s
             done.append(req)
-            slots[i] = None
+            release(i)
+
+        def preempt(i: int):
+            req = slots[i]
+            self.preempted_rids.add(req.rid)
+            resume[req.rid] = (
+                np.concatenate([np.asarray(slot_prompt[i], np.int32),
+                                np.asarray(gens[i], np.int32)]),
+                slot_budget[i] - len(gens[i]),
+                prefix[i] + gens[i])
+            pending.insert(0, req)  # re-admit as soon as pages free up
+            self.stats.preemptions += 1
+            release(i)
 
         while pending or any(s is not None for s in slots):
             now = time.perf_counter() - t0
@@ -235,25 +410,46 @@ class ContinuousScheduler(_SchedulerBase):
             for i in range(self.batch):
                 while slots[i] is None and pending and \
                         pending[0].arrival_s <= now:
-                    req = pending.pop(0)
+                    req = pending[0]
                     if req.max_new_tokens <= 0:
+                        pending.pop(0)
                         req.output = np.zeros((0,), np.int32)
                         req.latency_s = max(now - req.arrival_s, 0.0)
                         done.append(req)
                         continue
-                    toks, length = self._bucket(req.prompt)
+                    prompt, budget, out_prefix = resume.pop(
+                        req.rid, (req.prompt, req.max_new_tokens, []))
+                    toks, length = self._bucket(prompt)
+                    if self.allocator is not None:
+                        # pages for the prompt + the first decode write;
+                        # later pages are grown on demand
+                        need = -(-(length + 1) // self.page_size)
+                        pages = self.allocator.alloc(need)
+                        if pages is None:
+                            resume.setdefault(
+                                req.rid, (prompt, budget, out_prefix))
+                            break  # pool dry: wait for an eviction
+                        slot_pages[i] = pages
+                        state = self._write_table_row(state, i, pages)
+                    pending.pop(0)
                     logits, state = self._prefill(
                         self.params, toks, length, state, i)
                     tok0 = int(np.argmax(np.asarray(logits)))
                     self.stats.prefills += 1
                     self.stats.useful_tokens += 1  # prefill's first token
                     now = time.perf_counter() - t0
-                    req.first_token_s = now - req.arrival_s
+                    if not req.first_token_s:  # keep it across preemptions
+                        req.first_token_s = now - req.arrival_s
                     slots[i] = req
+                    slot_prompt[i], slot_budget[i] = prompt, budget
+                    prefix[i] = list(out_prefix)
                     gens[i] = [tok0]
                     cur[i, 0] = tok0
+                    kv_next[i] = length
+                    seq += 1
+                    admit_seq[i] = seq
                     if (self.eos_id >= 0 and tok0 == self.eos_id) or \
-                            req.max_new_tokens == 1:
+                            budget == 1:
                         finish(i, now)  # slot freed: admission loop retries
             if not any(s is not None for s in slots):
                 if pending:  # idle until the next arrival (no busy-wait)
@@ -261,21 +457,43 @@ class ContinuousScheduler(_SchedulerBase):
                                    (time.perf_counter() - t0)))
                     continue
                 break
+            # --- paged: grow slots crossing a page boundary this step ---
+            if self.allocator is not None:
+                for i in range(self.batch):
+                    while slots[i] is not None and \
+                            kv_next[i] // self.page_size >= len(slot_pages[i]):
+                        pg = self.allocator.alloc(1)
+                        if pg is not None:
+                            slot_pages[i].append(pg[0])
+                            state = self._write_table_row(
+                                state, i, slot_pages[i])
+                            continue
+                        # pool dry mid-decode: preempt the youngest slot
+                        active = [j for j in range(self.batch)
+                                  if slots[j] is not None]
+                        preempt(max(active, key=lambda j: admit_seq[j]))
+                if not any(s is not None for s in slots):
+                    continue  # everyone preempted: back to admission
             # --- one decode step for the whole batch, slots independent ---
+            n_active = sum(s is not None for s in slots)
+            t_step = time.perf_counter()
             logits, state = self._decode(self.params, jnp.asarray(cur), state)
             col = np.asarray(jnp.argmax(logits, -1))
             self.stats.decode_steps += 1
+            if self.stats.decode_steps > 1:  # first step bears the compile
+                self.stats.decode_s += time.perf_counter() - t_step
+                self.stats.decode_tokens += n_active
             now = time.perf_counter() - t0
             for i in range(self.batch):
                 if slots[i] is None:
                     self.stats.wasted_slots += 1
                     continue
                 self.stats.useful_tokens += 1
+                kv_next[i] += 1
                 gens[i].append(int(col[i]))
                 cur[i, 0] = int(col[i])
-                req = slots[i]
                 if (self.eos_id >= 0 and col[i] == self.eos_id) or \
-                        len(gens[i]) >= req.max_new_tokens:
+                        len(gens[i]) >= slot_budget[i]:
                     finish(i, now)
         self.stats.wall_s += time.perf_counter() - t0
         return done

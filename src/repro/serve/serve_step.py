@@ -108,15 +108,62 @@ def make_decode_step(cfg: ModelConfig, tcfg, mesh: Mesh,
 
 
 def _cache_geometry(state):
-    """(max_len, cache_dtype, enc_len) recovered from a live decode state."""
-    max_len, cache_dtype, enc_len = 0, jnp.float32, 0
+    """(max_len, cache_dtype, enc_len, paged) from a live decode state.
+
+    ``paged`` is None for contiguous caches, else a dict with the page
+    geometry ({page_size, max_pages, quantized}).  For paged states
+    ``max_len`` is the per-slot capacity (max_pages * page_size) and
+    ``cache_dtype`` is the dtype a *contiguous scratch row* should use
+    (float32 for int8 pages -- quantisation happens at the page scatter).
+    """
+    max_len, cache_dtype, enc_len, paged = 0, jnp.float32, 0, None
     for st in state["blocks"]:
-        if "cache" in st:
+        if "cache" in st and "k_pages" in st["cache"]:
+            ps = st["cache"]["k_pages"].shape[2]
+            mp = st["cache"]["block_table"].shape[2]
+            quant = "k_scale" in st["cache"]
+            paged = {"page_size": ps, "max_pages": mp, "quantized": quant}
+            max_len = max(max_len, mp * ps)
+            cache_dtype = (jnp.float32 if quant
+                           else st["cache"]["k_pages"].dtype)
+        elif "cache" in st:
             max_len = max(max_len, st["cache"]["k"].shape[2])
             cache_dtype = st["cache"]["k"].dtype
         if "cross" in st:
             enc_len = st["cross"]["k"].shape[2]
-    return max_len, cache_dtype, enc_len
+    return max_len, cache_dtype, enc_len, paged
+
+
+def _scatter_row_into_pages(live, row, slot, length=None, width=None):
+    """Scatter a single-row contiguous cache (n_blocks, 1, cap, KV, Dh) into
+    the pages that ``block_table[:, slot]`` names: layers.paged_prefill_write
+    (the whole-batch prefill scatter, including int8 quantisation, pad-row
+    zeroing past ``length`` and the trash-page overflow convention) vmapped
+    over the stacked block axis.  ``width`` (the static prefill bucket)
+    limits the scatter to the pages the prefill actually filled -- writing
+    the whole capacity would amplify admission traffic by max_pages/n."""
+    from repro.models import layers as L
+    ps = live["k_pages"].shape[2]
+    quant = "k_scale" in live
+    keys = ["k_pages", "v_pages"] + (["k_scale", "v_scale"] if quant else [])
+    vlen = None if length is None else jnp.asarray(length).reshape((1,))
+    cap = row["k"].shape[2]
+    aligned = min(cap, -(-(width or cap) // ps) * ps)
+    pids = jnp.take(live["block_table"], slot, axis=1)        # (n_blocks, mp)
+
+    def one_layer(kp, vp, bt_row, rk, rv, *scales):
+        pc = {"k_pages": kp, "v_pages": vp, "block_table": bt_row[None]}
+        if scales:
+            pc["k_scale"], pc["v_scale"] = scales
+        out = L.paged_prefill_write(pc, rk[None], rv[None], valid_len=vlen)
+        return tuple(out[k] for k in keys)
+
+    args = [live["k_pages"], live["v_pages"], pids,
+            row["k"][:, 0, :aligned], row["v"][:, 0, :aligned]]
+    if quant:
+        args += [live["k_scale"], live["v_scale"]]
+    new = jax.vmap(one_layer)(*args)
+    return dict(live, **dict(zip(keys, new)))
 
 
 def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
@@ -133,6 +180,10 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
     Returns (next_token_logits (V,), new_state).  jit-stable: ``length`` and
     ``slot`` are traced scalars, shapes depend only on the bucket width.
 
+    Paged states: the request is prefilled into a contiguous scratch row,
+    then scattered into the pages named by ``block_table[:, slot]`` (the
+    scheduler must have written the slot's page ids *before* calling this).
+
     Constraints: P must not exceed the smallest attention-cache length (a
     sliding-window layer's ring keeps only its last ``window`` positions of
     a wider prefill, which would drop real tokens of short prompts), and the
@@ -145,9 +196,14 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
     assert all(mixer.startswith("attn") for mixer, _ in cfg.block_pattern), \
         "right-padded slot prefill requires attention-only archs (recurrent" \
         " state would absorb the pad tokens)"
-    max_len, cache_dtype, enc_len = _cache_geometry(state)
+    max_len, cache_dtype, enc_len, paged = _cache_geometry(state)
+    # a bucket wider than the cache extent would make kv_len = pos + s
+    # overrun the cache (the decode path clamps, silently dropping prompt
+    # tokens) -- reject the geometry outright
+    assert p <= max_len, \
+        f"prefill bucket {p} exceeds the cache extent {max_len}"
     for st in state["blocks"]:
-        if "cache" in st:
+        if "cache" in st and "k" in st["cache"]:
             assert p <= st["cache"]["k"].shape[2], \
                 "prefill bucket exceeds a (windowed) cache length"
     row = T.init_decode_state(cfg, 1, max_len, cache_dtype, enc_len=enc_len)
@@ -161,8 +217,23 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
         return jax.lax.dynamic_update_slice_in_dim(
             live, new.astype(live.dtype), slot, axis=1)
 
-    blocks = jax.tree_util.tree_map(scatter_row, state["blocks"],
-                                    row["blocks"])
+    if paged is None:
+        blocks = jax.tree_util.tree_map(scatter_row, state["blocks"],
+                                        row["blocks"])
+    else:
+        # the scratch row's contiguous cache is scattered into the pages the
+        # slot's block table names; every other leaf (cross caches) scatters
+        # along the batch axis as usual
+        blocks = []
+        for live_st, row_st in zip(state["blocks"], row["blocks"]):
+            d = {k: jax.tree_util.tree_map(scatter_row, live_st[k],
+                                           row_st[k])
+                 for k in live_st if k != "cache"}
+            d["cache"] = _scatter_row_into_pages(live_st["cache"],
+                                                 row_st["cache"], slot,
+                                                 length, width=p)
+            blocks.append(d)
+        blocks = tuple(blocks)
     pos = jax.lax.dynamic_update_slice(
         state["pos"], row["pos"].astype(state["pos"].dtype), (slot,))
     return logits[0], {"pos": pos, "blocks": blocks}
