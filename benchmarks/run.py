@@ -23,6 +23,7 @@ MODULES = [
     ("roofline", "benchmarks.roofline"),
     ("serve", "benchmarks.serve_continuous"),
     ("serve_paged", "benchmarks.serve_paged"),
+    ("serve_prefix", "benchmarks.serve_prefix"),
 ]
 
 

@@ -40,6 +40,27 @@ except ImportError:
     from serve_continuous import make_trace
 
 
+def write_section(path, section, payload):
+    """Merge ``payload`` under ``section`` in the JSON file at ``path``.
+
+    BENCH_serve.json is shared by serve_paged and serve_prefix; each writes
+    only its own section so re-running one bench preserves the other's
+    numbers.  A legacy single-bench file (top-level ``bench`` key) is folded
+    into its own section first.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        doc = {}
+    if "bench" in doc:  # pre-sectioned layout: one bench at top level
+        doc = {doc["bench"]: doc}
+    doc[section] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+
+
 def run_mode(params, cfg, pol, args, mode, num_pages):
     kw = dict(batch=args.batch, max_len=args.max_len,
               prefill_len=args.prefill_len)
@@ -210,10 +231,8 @@ def main(argv=()):
         "modes": results,
         "derived": derived,
     }
-    with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
-        f.write("\n")
-    print(f"wrote {args.out}")
+    write_section(args.out, "serve_paged", payload)
+    print(f"wrote {args.out} [serve_paged]")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,183 @@
+"""Prefix caching: shared-prompt trace with and without page sharing.
+
+  PYTHONPATH=src python benchmarks/serve_prefix.py \
+      [--arch deepseek-7b] [--batch 8] [--requests 32] [--groups 4] \
+      [--head-len 48] [--rate 50] [--out BENCH_serve.json]
+
+Builds a Poisson-arrival trace where the requests fall into ``--groups``
+families sharing a common ``--head-len``-token prompt head (a synthetic
+"system prompt"); a quarter of each family repeats its first prompt
+verbatim so full-hit admissions occur too.  The SAME trace is replayed
+through ``ContinuousScheduler`` under ``paged`` and ``paged_int8`` with
+``prefix_cache`` off (baseline) and on, and the bench reports:
+
+* ``cache_hit_rate`` / full hits / pages shared / COW copies,
+* ``prefill_tokens`` actually computed and ``prefill_tokens_saved``,
+* ``prefill_tokens_reduction`` -- baseline computed / prefix computed
+  (the >=2x acceptance number),
+* trace tokens/s and output equality vs the unshared baseline (bf16
+  shared decode must be bit-exact).
+
+Results land in the ``serve_prefix`` section of ``BENCH_serve.json``
+next to the ``serve_paged`` numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import transformer as T
+from repro.serve.scheduler import ContinuousScheduler, Request
+
+try:  # run.py imports this as benchmarks.serve_prefix; scripts run it bare
+    from benchmarks.serve_paged import write_section
+except ImportError:
+    from serve_paged import write_section
+
+
+def make_shared_trace(args, vocab):
+    """Poisson trace of ``--groups`` families with a shared prompt head."""
+    rng = np.random.default_rng(args.seed)
+    heads = [rng.integers(0, vocab, size=args.head_len, dtype=np.int32)
+             for _ in range(args.groups)]
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, size=args.requests))
+    first, reqs = {}, []
+    max_tail = max(args.prefill_len - args.head_len, 3)
+    for i in range(args.requests):
+        g = i % args.groups
+        if g in first and (i // args.groups) % 4 == 3:
+            prompt = first[g]            # verbatim repeat -> full hit
+        else:
+            tail = rng.integers(0, vocab, size=int(rng.integers(2, max_tail)),
+                                dtype=np.int32)
+            prompt = np.concatenate([heads[g], tail])[: args.prefill_len - 1]
+            first.setdefault(g, prompt)
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            max_new_tokens=int(rng.integers(args.min_new, args.max_new + 1)),
+            arrival_s=float(arrivals[i])))
+    return reqs
+
+
+def run_trace(params, cfg, pol, args, mode, num_pages, prefix):
+    sched = ContinuousScheduler(
+        params, cfg, pol, batch=args.batch, max_len=args.max_len,
+        prefill_len=args.prefill_len, cache_mode=mode,
+        page_size=args.page_size, num_pages=num_pages, prefix_cache=prefix)
+    for r in make_shared_trace(args, cfg.vocab_size):
+        sched.submit(r)
+    done = sched.run()
+    preempted = set(sched.preempted_rids)
+    st = sched.stats
+    assert sched.allocator.in_use == 0, "pages leaked after drain"
+    res = {
+        "tokens_per_s": round(st.tokens_per_s, 1),
+        "decode_tokens_per_s": round(st.decode_tokens_per_s, 1),
+        "useful_tokens": st.useful_tokens,
+        "prefills": st.prefills,
+        "prefill_tokens": st.prefill_tokens,
+        "preemptions": st.preemptions,
+    }
+    if prefix:
+        res.update({
+            "cache_hit_rate": round(st.prefix_hit_rate, 3),
+            "prefix_hits": st.prefix_hits,
+            "prefix_lookups": st.prefix_lookups,
+            "prefix_full_hits": st.prefix_full_hits,
+            "pages_shared": st.pages_shared,
+            "prefill_tokens_saved": st.prefill_tokens_saved,
+            "cow_copies": st.cow_copies,
+            "cached_pages_reclaimed": sched.allocator.reclaimed,
+        })
+    outputs = {r.rid: np.asarray(r.output) for r in done
+               if r.rid not in preempted}
+    return res, outputs
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-7b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--groups", type=int, default=4)
+    ap.add_argument("--head-len", type=int, default=48,
+                    help="shared prompt-head length per group (tokens)")
+    ap.add_argument("--rate", type=float, default=50.0)
+    ap.add_argument("--min-new", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prefill-len", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-frac", type=float, default=1.0,
+                    help="page pool as a fraction of batch*max_len tokens")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(list(argv))
+    if args.head_len + args.prefill_len > args.max_len:
+        raise SystemExit(
+            "need head_len + prefill_len <= max_len so suffix prefills fit "
+            "the per-slot extent (otherwise every hit falls back to a full "
+            "prefill and nothing is shared)")
+
+    cfg = smoke_variant(get_config(args.arch))
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only archs have no decode step")
+    pol = make_policy("f32")
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+
+    max_pages = -(-args.max_len // args.page_size)
+    worst = args.batch * max_pages
+    num_pages = 1 + max(max_pages, int(worst * args.pool_frac))
+    print(f"arch={cfg.arch_id} batch={args.batch} requests={args.requests} "
+          f"groups={args.groups} head_len={args.head_len} "
+          f"pool={num_pages - 1}/{worst} pages")
+
+    results = {}
+    for mode in ("paged", "paged_int8"):
+        res_off, out_off = run_trace(params, cfg, pol, args, mode,
+                                     num_pages, prefix=False)
+        res_on, out_on = run_trace(params, cfg, pol, args, mode,
+                                   num_pages, prefix=True)
+        mismatched = sum(
+            1 for rid, out in out_off.items()
+            if rid in out_on and not np.array_equal(out, out_on[rid]))
+        derived = {
+            "prefill_tokens_reduction": round(
+                res_off["prefill_tokens"] /
+                max(res_on["prefill_tokens"], 1), 2),
+            "output_mismatches_vs_unshared": mismatched,
+            "compared_outputs": len(out_off),
+        }
+        results[mode] = {"baseline": res_off, "prefix": res_on,
+                         "derived": derived}
+        print(f"{mode:11s} hit_rate={res_on['cache_hit_rate']:.2f} "
+              f"({res_on['prefix_hits']}/{res_on['prefix_lookups']}, "
+              f"{res_on['prefix_full_hits']} full) "
+              f"prefill_tok {res_off['prefill_tokens']} -> "
+              f"{res_on['prefill_tokens']} "
+              f"(x{derived['prefill_tokens_reduction']} reduction, "
+              f"{res_on['prefill_tokens_saved']} saved) "
+              f"shared={res_on['pages_shared']}p cow={res_on['cow_copies']} "
+              f"tok/s {res_off['tokens_per_s']} -> {res_on['tokens_per_s']} "
+              f"mismatches={mismatched}/{derived['compared_outputs']}")
+
+    payload = {
+        "bench": "serve_prefix",
+        "config": {k: getattr(args, k) for k in
+                   ("arch", "batch", "requests", "groups", "head_len",
+                    "rate", "max_len", "prefill_len", "page_size",
+                    "pool_frac", "seed")},
+        "num_pages": num_pages,
+        "modes": results,
+    }
+    write_section(args.out, "serve_prefix", payload)
+    print(f"wrote {args.out} [serve_prefix]")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

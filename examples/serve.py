@@ -35,22 +35,34 @@ def run_scheduler(args, cfg, pol, params):
     from repro.serve.scheduler import (CohortScheduler, ContinuousScheduler,
                                        Request)
     max_len = args.prompt_len + args.new_tokens
+    if args.prefix_cache:
+        # headroom so a suffix prefill (static prefill_len-wide bucket at
+        # offset `covered`) fits inside the per-slot cache extent; without
+        # it the scheduler falls back to full prefills and never shares
+        max_len += args.prompt_len
     if args.mode == "continuous":
         sched = ContinuousScheduler(
             params, cfg, pol, batch=args.batch, max_len=max_len,
             prefill_len=min(args.prompt_len, max_len),
             cache_mode=args.cache_mode, page_size=args.page_size,
-            num_pages=args.num_pages)
+            num_pages=args.num_pages, prefix_cache=args.prefix_cache)
     else:
         sched = CohortScheduler(params, cfg, pol, batch=args.batch,
                                 max_len=max_len)
     rng = np.random.default_rng(0)
+    # a few shared system-prompt prefixes so --prefix-cache has hits
+    groups = [rng.integers(0, cfg.vocab_size,
+                           size=max(args.prompt_len // 2, 1), dtype=np.int32)
+              for _ in range(args.prefix_groups)]
     for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(4, args.prompt_len + 1)),
+                              dtype=np.int32)
+        if args.prefix_cache:
+            head = groups[i % len(groups)]
+            prompt = np.concatenate([head, prompt])[: args.prompt_len]
         sched.submit(Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab_size,
-                                size=int(rng.integers(4, args.prompt_len + 1)),
-                                dtype=np.int32),
+            rid=i, prompt=prompt,
             max_new_tokens=int(rng.integers(2, args.new_tokens + 1))))
     done = sched.run()
     st = sched.stats
@@ -64,6 +76,15 @@ def run_scheduler(args, cfg, pol, params):
                     "%d pages leaked, %d cache bytes", args.cache_mode,
                     sched.num_pages - 1, st.preemptions,
                     sched.allocator.in_use, sched.cache_bytes())
+        if args.prefix_cache:
+            logger.info(
+                "prefix cache: hit rate %.2f (%d/%d, %d full), %d pages "
+                "shared, %d prefill tokens saved (%d computed), %d COW "
+                "copies, %d cached pages held, %d reclaimed",
+                st.prefix_hit_rate, st.prefix_hits, st.prefix_lookups,
+                st.prefix_full_hits, st.pages_shared,
+                st.prefill_tokens_saved, st.prefill_tokens, st.cow_copies,
+                sched.allocator.cached, sched.allocator.reclaimed)
         assert sched.allocator.in_use == 0, "pages leaked after drain"
 
 
@@ -84,6 +105,13 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="page pool size incl. trash page (default: full "
                          "provisioning); small pools force preemption")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share cached prompt-prefix pages across slots "
+                         "(paged cache modes only); the workload gains "
+                         "shared system-prompt heads so hits occur")
+    ap.add_argument("--prefix-groups", type=int, default=2,
+                    help="distinct shared prefixes in the --prefix-cache "
+                         "workload")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config(args.arch))

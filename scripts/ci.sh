@@ -5,11 +5,14 @@
 #   bash scripts/ci.sh tests      # tier-1 pytest only
 #   bash scripts/ci.sh serve      # 2-device serve example smoke only
 #   bash scripts/ci.sh paged      # paged KV-cache smoke (tiny pool)
+#   bash scripts/ci.sh prefix     # prefix-cache smoke (reclaim-before-preempt)
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
 # in the decode path surface without accelerators.  The paged smoke runs the
 # continuous scheduler with 2 pages per slot and a deliberately starved pool
 # so the PageAllocator's grow/evict/reuse/preempt paths run on every PR.
+# The prefix smoke starves the pool under shared-prefix load and asserts the
+# cached zero-ref pages are LRU-reclaimed before any slot is preempted.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -38,6 +41,47 @@ if [[ "$step" == "all" || "$step" == "paged" ]]; then
     python examples/serve.py --mode continuous --cache-mode paged_int8 \
         --batch 2 --prompt-len 8 --new-tokens 8 --requests 6 \
         --page-size 8 --num-pages 4
+fi
+
+if [[ "$step" == "all" || "$step" == "prefix" ]]; then
+    echo "=== prefix-cache smoke: starved pool, reclaim before preemption ==="
+    # shared-prefix hits on both paged modes, with hit-rate printout
+    python examples/serve.py --mode continuous --cache-mode paged \
+        --batch 2 --prompt-len 16 --new-tokens 6 --requests 8 \
+        --page-size 8 --prefix-cache
+    # starved pool (12 usable pages, <=3 pages/admission): drained requests'
+    # zero-ref cached pages MUST be reclaimed to feed later admissions, and
+    # must yield before any live slot is preempted
+    python - <<'EOF'
+import jax, numpy as np
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import transformer as T
+from repro.serve.scheduler import ContinuousScheduler, Request
+
+cfg = smoke_variant(get_config("deepseek-7b"))
+params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+sched = ContinuousScheduler(
+    params, cfg, make_policy("f32"), batch=2, max_len=48, prefill_len=16,
+    cache_mode="paged", page_size=8, num_pages=13, prefix_cache=True)
+rng = np.random.default_rng(4)
+heads = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+         for _ in range(3)]
+for i in range(9):
+    sched.submit(Request(
+        rid=i, max_new_tokens=6,
+        prompt=np.concatenate([heads[i % 3],
+                               rng.integers(0, cfg.vocab_size, size=5,
+                                            dtype=np.int32)])))
+done = sched.run()
+st = sched.stats
+print(f"done={len(done)} hit_rate={st.prefix_hit_rate:.2f} "
+      f"reclaimed={sched.allocator.reclaimed} preemptions={st.preemptions}")
+assert len(done) == 9
+assert sched.allocator.reclaimed > 0, "cache never yielded pages"
+assert st.preemptions == 0, "preempted a live slot before draining the cache"
+assert sched.allocator.in_use == 0, "pages leaked after drain"
+EOF
 fi
 
 echo "CI OK"

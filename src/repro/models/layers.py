@@ -562,9 +562,14 @@ def apply_attention(params: Params, x: jax.Array, cfg: ModelConfig,
             # clamp: a prompt of exactly cache_len tokens leaves cpos + s one
             # past the extent -- the ring holds at most cache_len valid slots
             kv_len = jnp.minimum(cpos + s, ck.shape[1])
-        # no causal/window masks: the ring buffer's kv_len IS the window
-        out = naive_attention(q, ck, cv, causal=False, window=0,
-                              softcap=softcap, q_offset=0,
+        # single-token decode: no causal/window masks -- the ring buffer's
+        # kv_len IS the window (causal over ring indices would be wrong once
+        # the write position wraps).  A multi-token write (suffix prefill
+        # resuming at a cached-prefix offset, which never wraps) needs the
+        # causal mask at q_offset = cpos for within-chunk causality.
+        out = naive_attention(q, ck, cv, causal=(s > 1), window=0,
+                              softcap=softcap,
+                              q_offset=(cpos if s > 1 else 0),
                               kv_len=kv_len, reduce_dtype=policy.reduce_dtype)
     else:
         sq, skv = q.shape[1], k.shape[1]
@@ -708,6 +713,37 @@ def paged_prefill_write(pcache: dict, k: jax.Array, v: jax.Array,
         dt = pcache["k_pages"].dtype
         out["k_pages"] = pcache["k_pages"].at[pids].set(kr.astype(dt))
         out["v_pages"] = pcache["v_pages"].at[pids].set(vr.astype(dt))
+    return out
+
+
+def copy_page_cow(pcache: dict, src, dst, valid) -> dict:
+    """Copy-on-write divergence copy: duplicate page ``src`` into ``dst``
+    across the stacked (n_blocks, ...) pool so a slot can append privately
+    without corrupting siblings that still read ``src``.
+
+    Only the first ``valid`` rows (the copying slot's live tokens in that
+    page) are kept; the rest are zeroed -- they hold the sibling's tokens,
+    dead to this slot under its kv_len mask but a scale hazard for int8.
+    int8 pages RESTART their quantisation scale from the copied rows
+    (mirroring the recycled-page fix): the copy dequantises at the shared
+    page's scale, then requantises fresh, so the sibling's larger-magnitude
+    appends never coarsen the private copy.  ``src``/``dst``/``valid`` may
+    be traced scalars."""
+    ps = pcache["k_pages"].shape[2]
+    rows = jnp.arange(ps) < jnp.asarray(valid)
+    out = dict(pcache)
+    if "k_scale" in pcache:
+        for pk, sk in (("k_pages", "k_scale"), ("v_pages", "v_scale")):
+            page = pcache[pk][:, src].astype(jnp.float32)  # (n_blocks,ps,kv,dh)
+            page = page * pcache[sk][:, src][:, None, :, None]
+            page = jnp.where(rows[None, :, None, None], page, 0.0)
+            q, sc = quantize_pages(page)
+            out[pk] = pcache[pk].at[:, dst].set(q)
+            out[sk] = pcache[sk].at[:, dst].set(sc)
+    else:
+        for pk in ("k_pages", "v_pages"):
+            page = jnp.where(rows[None, :, None, None], pcache[pk][:, src], 0)
+            out[pk] = pcache[pk].at[:, dst].set(page)
     return out
 
 

@@ -137,6 +137,7 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
     if mixer.startswith("attn"):
         cache = state.get("cache") if state is not None else None
         if cache is not None and decode_pos is not None:
+            s_tok = h.shape[1]  # 1 for decode; >1 for suffix (resume) prefill
             if "k_pages" in cache:  # paged: capacity = table width x page
                 cache_len = (cache["block_table"].shape[-1] *
                              cache["k_pages"].shape[1])
@@ -147,11 +148,11 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
             else:
                 cache_len = cache["k"].shape[1]
                 write_pos = jnp.mod(decode_pos, cache_len)
-            kv_len = jnp.minimum(decode_pos + 1, cache_len)
+            kv_len = jnp.minimum(decode_pos + s_tok, cache_len)
             y, nc = L.apply_attention(
                 p["mixer"], h, cfg, policy, mixer_kind="attn",
                 positions=_decode_positions(positions, decode_pos, h.shape[0],
-                                            cfg),
+                                            cfg, s_tok),
                 cache=cache, cache_pos=write_pos, kv_len=kv_len,
                 return_cache=return_state)
             # ring buffers hold only valid slots; kv_len mask applied inside
@@ -210,13 +211,17 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
     return x, new_state, aux
 
 
-def _decode_positions(positions, decode_pos, batch, cfg: ModelConfig):
+def _decode_positions(positions, decode_pos, batch, cfg: ModelConfig,
+                      s: int = 1):
+    """Absolute positions for ``s`` tokens starting at ``decode_pos`` (scalar
+    or per-slot (B,)): s == 1 is plain decode, s > 1 a suffix prefill."""
     if positions is not None:
         return positions
     p = jnp.asarray(decode_pos).astype(jnp.int32)
-    p = jnp.broadcast_to(p[:, None] if p.ndim else p, (batch, 1))
+    p = p[:, None] if p.ndim else p
+    p = jnp.broadcast_to(p + jnp.arange(s, dtype=jnp.int32), (batch, s))
     if cfg.pos_kind == "mrope":
-        return jnp.broadcast_to(p[None], (3, batch, 1))
+        return jnp.broadcast_to(p[None], (3, batch, s))
     return p
 
 
@@ -483,6 +488,52 @@ def prefill(params, tokens, cfg: ModelConfig, policy: Policy, *,
     x_last = L.apply_norm(params["final_norm"], x_last, cfg, policy)
     logits = _lm_logits(params, x_last, cfg, policy)[:, 0]
     return logits, {"pos": new_pos, "blocks": new_block_states}
+
+
+def prefill_suffix(params, tokens, start, length, cfg: ModelConfig,
+                   policy: Policy, *, state, moe_impl: str = "dense"):
+    """Resume a prefill at position ``start``: run ONLY the uncached suffix.
+
+    ``tokens``: (B, P) right-padded suffix bucket; ``length``: (scalar or
+    (B,)) true suffix length; ``state``: a decode state whose attention
+    caches already hold positions [0, start) (a prefix-cache hit).  The
+    suffix KV is written in place at [start, start+P) and every suffix query
+    attends causally at its absolute position (prefix slots are all visible;
+    pad rows past ``length`` are masked by kv_len / overwritten later).
+
+    Returns (last-true-suffix-token logits (B, V), new state) with ``pos``
+    advanced to ``start + length``.  Requires attention-only archs (same
+    constraint as ``prefill_into_slot``: pad tokens must not advance a
+    recurrent scan) and ``start + P`` within the cache extent.
+    """
+    b, s = tokens.shape
+    assert all(mixer.startswith("attn") for mixer, _ in cfg.block_pattern), \
+        "suffix prefill requires attention-only archs"
+    pos0 = jnp.asarray(start).astype(jnp.int32).reshape(())
+    x = L.embed_tokens(params["embed"], tokens, cfg, policy, pos_offset=pos0)
+    x, aux, new_block_states = _run_blocks(
+        params["blocks"], x, cfg, policy, cfg.block_pattern,
+        states=state["blocks"], decode_pos=pos0, return_states=True,
+        moe_impl=moe_impl)
+    lengths = jnp.broadcast_to(jnp.asarray(length), (b,)).astype(jnp.int32)
+    x_last = x[jnp.arange(b), lengths - 1][:, None]
+    x_last = L.apply_norm(params["final_norm"], x_last, cfg, policy)
+    logits = _lm_logits(params, x_last, cfg, policy)[:, 0]
+    return logits, {"pos": pos0 + lengths, "blocks": new_block_states}
+
+
+def copy_page(state, src, dst, valid):
+    """Copy-on-write: duplicate page ``src`` into ``dst`` in every attention
+    layer's page pool (see layers.copy_page_cow for the zeroing / int8
+    scale-restart rules).  ``src``/``dst``/``valid`` may be traced scalars;
+    block tables are untouched -- the scheduler repoints the diverging
+    slot's row afterwards."""
+    blocks = []
+    for st in state["blocks"]:
+        if "cache" in st and "k_pages" in st["cache"]:
+            st = dict(st, cache=L.copy_page_cow(st["cache"], src, dst, valid))
+        blocks.append(st)
+    return dict(state, blocks=tuple(blocks))
 
 
 def decode_step(params, token, state, cfg: ModelConfig, policy: Policy, *,

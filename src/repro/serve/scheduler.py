@@ -28,11 +28,20 @@ hands out pages from a global pool at admission, slots grow page-by-page
 during decode, and eviction returns pages -- admission capacity becomes
 pages-available rather than slots x max_len
 (benchmarks/serve_paged.py measures the trade).
+
+``prefix_cache=True`` (paged modes) turns the allocator into a refcounted
+prefix cache: prompts are chain-hashed in page-size token chunks, an
+admission maps the longest cached page-aligned prefix straight into its
+block table and prefills only the uncached suffix (a whole-prompt hit skips
+the prefill jit entirely), decode writes into a shared page copy-on-write
+first, and zero-ref cached pages are LRU-reclaimed under pool pressure
+before any slot is preempted (benchmarks/serve_prefix.py measures the win).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Callable, List, Optional
 
 import jax
@@ -67,6 +76,14 @@ class ServeStats:
     wall_s: float = 0.0
     decode_s: float = 0.0        # time inside decode steps (post-compile)
     decode_tokens: int = 0       # useful tokens those steps produced
+    # prefix caching (paged modes with prefix_cache=True)
+    prefix_lookups: int = 0      # admissions that consulted the prefix index
+    prefix_hits: int = 0         # admissions that mapped >= 1 cached page
+    prefix_full_hits: int = 0    # whole prompt cached: prefill skipped
+    prefill_tokens: int = 0      # prompt tokens actually run through prefill
+    prefill_tokens_saved: int = 0  # prompt tokens served from cached pages
+    pages_shared: int = 0        # cached pages mapped into admitted slots
+    cow_copies: int = 0          # copy-on-write page duplications
 
     @property
     def slot_utilisation(self) -> float:
@@ -78,6 +95,11 @@ class ServeStats:
         return self.useful_tokens / self.wall_s if self.wall_s else 0.0
 
     @property
+    def prefix_hit_rate(self) -> float:
+        return (self.prefix_hits / self.prefix_lookups
+                if self.prefix_lookups else 0.0)
+
+    @property
     def decode_tokens_per_s(self) -> float:
         """Steady-state decode throughput: tokens produced per second of
         decode-step time, excluding the compile-bearing first step (the
@@ -86,42 +108,192 @@ class ServeStats:
 
 
 class PageAllocator:
-    """Free-list allocator over a global KV-cache page pool.
+    """Refcounting allocator over a global KV-cache page pool, with an
+    optional prefix index for cross-slot page sharing.
 
     Page 0 is reserved as the *trash page* (empty slots' block-table entries
     point there so stray decode writes never corrupt live data), so ids
     ``1..num_pages-1`` circulate.  ``alloc`` is all-or-nothing: it returns
-    None rather than a partial allocation.  Double-frees and foreign pages
-    raise -- the invariant the stress test leans on.
+    None rather than a partial allocation.  ``alloc``/``free`` are ref/unref:
+    an allocated page starts at refcount 1, ``ref`` maps it into additional
+    slots, and ``free`` decrements -- the page only leaves circulation when
+    the count hits zero.  Double-frees and foreign pages raise -- the
+    invariant the stress test leans on.
+
+    ``prefix_cache=True`` adds a page-granular prefix trie: prompt token
+    sequences are chain-hashed in ``page_size``-token chunks, each chunk
+    keyed ``(parent_page, chunk_bytes) -> page``, so two prompts share
+    exactly the pages of their longest common page-aligned prefix.  A
+    registered page whose refcount drops to zero is NOT returned to the free
+    list: it parks in an LRU of reclaimable cached pages (a future admission
+    with the same prefix revives it for free), and ``alloc`` reclaims
+    LRU-oldest *leaf* nodes only when the free list runs dry -- so cached
+    pages are always sacrificed before the scheduler has to preempt a live
+    slot.  Leaf-only reclaim keeps the trie rooted: a zero-ref page's
+    children are themselves zero-ref (a slot always maps a node's whole
+    ancestor chain, so a referenced child implies a referenced parent),
+    hence the reclaimable set always contains a childless node.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, page_size: int = 16,
+                 prefix_cache: bool = False):
         assert num_pages >= 2, "pool needs the trash page plus one real page"
         self.num_pages = num_pages
+        self.page_size = page_size
+        self.prefix_cache = prefix_cache
+        self.reclaimed = 0           # cached pages sacrificed to allocation
         self._free = list(range(num_pages - 1, 0, -1))
-        self._live: set = set()
+        self._ref: dict = {}         # page -> refcount (> 0)
+        # prefix trie over page_size-token chunks (root sentinel = page 0)
+        self._node: dict = {}        # (parent_page, chunk_bytes) -> page
+        self._key: dict = {}         # registered page -> its _node key
+        self._nchild: dict = {}      # registered page -> child node count
+        self._first_tok: dict = {}   # page -> first greedy token of the
+        #                              prompt that ends exactly at this node
+        self._lru: OrderedDict = OrderedDict()  # zero-ref cached pages
 
     @property
     def available(self) -> int:
-        return len(self._free)
+        """Pages an ``alloc`` can hand out (free + reclaimable cached)."""
+        return len(self._free) + len(self._lru)
+
+    @property
+    def cached(self) -> int:
+        """Zero-ref pages parked in the prefix cache (reclaimable)."""
+        return len(self._lru)
 
     @property
     def in_use(self) -> int:
-        return len(self._live)
+        return len(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        if n > len(self._free):
+        if n > len(self._free) + len(self._lru):
             return None
-        pages = [self._free.pop() for _ in range(n)]
-        self._live.update(pages)
+        pages = []
+        for _ in range(n):
+            pages.append(self._free.pop() if self._free
+                         else self._reclaim_one())
+        for p in pages:
+            self._ref[p] = 1
         return pages
+
+    def ref(self, pages: List[int]) -> None:
+        """Map already-live or cached pages into one more slot (+1 each);
+        zero-ref cached pages are revived out of the reclaimable LRU."""
+        for p in pages:
+            if p in self._ref:
+                self._ref[p] += 1
+            else:
+                del self._lru[p]     # KeyError = foreign page: loud is right
+                self._ref[p] = 1
 
     def free(self, pages: List[int]) -> None:
         for p in pages:
-            if p not in self._live:
+            n = self._ref.get(p, 0)
+            if n <= 0:
                 raise ValueError(f"double free or foreign page id {p}")
-            self._live.remove(p)
-            self._free.append(p)
+            if n > 1:
+                self._ref[p] = n - 1
+                continue
+            del self._ref[p]
+            if p in self._key:       # registered: park as reclaimable cache
+                self._lru[p] = None
+                self._lru.move_to_end(p)
+            else:
+                self._free.append(p)
+
+    # --- prefix index -----------------------------------------------------
+
+    def _chunks(self, tokens) -> List[bytes]:
+        toks = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        return [toks[o: o + ps].tobytes() for o in range(0, len(toks), ps)]
+
+    def match_prefix(self, tokens):
+        """Longest cached prefix of ``tokens`` -> (pages, covered, first_tok).
+
+        ``pages``: the trie chain (NOT yet ref'd -- callers ``ref`` them
+        immediately, before any ``alloc`` could reclaim them).  ``covered``:
+        prompt tokens those pages hold.  A partial (< page_size) last chunk
+        only matches exactly -- its node key is the exact byte string, so a
+        longer prompt sharing the partial tokens hashes to a different key.
+        ``first_tok`` is the cached first greedy token when the whole prompt
+        matched a node some registration ended at (full hit: the caller can
+        skip prefill entirely), else None.
+        """
+        if not self.prefix_cache:
+            return [], 0, None
+        pages: List[int] = []
+        covered, parent = 0, 0
+        chunks = self._chunks(tokens)
+        n = len(tokens)
+        for j, key in enumerate(chunks):
+            page = self._node.get((parent, key))
+            if page is None:
+                break
+            pages.append(page)
+            covered += min(self.page_size, n - covered)
+            parent = page
+        first_tok = (self._first_tok.get(parent)
+                     if pages and covered == n else None)
+        return pages, covered, first_tok
+
+    def register_prefix(self, tokens, pages: List[int],
+                        first_tok: int) -> None:
+        """Record that ``pages`` (the slot's page list covering ``tokens``,
+        all currently ref'd by that slot) hold this prompt's KV.  Chunks
+        already in the trie are left alone (shared admissions walk the same
+        pages; a private duplicate from the aligned-full-match fallback stays
+        unregistered and frees normally); new chunks are inserted under their
+        parent.  ``first_tok`` is cached on the end node either way, so the
+        next identical prompt is a full hit."""
+        if not self.prefix_cache:
+            return
+        parent = 0
+        chunks = self._chunks(tokens)
+        for j, (key, page) in enumerate(zip(chunks, pages)):
+            existing = self._node.get((parent, key))
+            if existing is not None and existing != page:
+                # the trie already holds this chunk on a page this slot
+                # does NOT map (aligned-full-match fallback, or a geometry
+                # fallback that full-prefilled over a cached head).  Deeper
+                # chunks would become trie children of a page this slot
+                # holds no reference on, letting that parent reach the
+                # reclaimable LRU while its child is still referenced --
+                # breaking leaf-only reclaim.  Cache the first token if the
+                # prompt ends exactly here, then stop.
+                if j == len(chunks) - 1:
+                    self._first_tok.setdefault(existing, int(first_tok))
+                return
+            if existing is None:
+                self._node[(parent, key)] = page
+                self._key[page] = (parent, key)
+                self._nchild[page] = 0
+                if parent:
+                    self._nchild[parent] += 1
+            parent = page
+        if parent:
+            self._first_tok.setdefault(parent, int(first_tok))
+
+    def _reclaim_one(self) -> int:
+        """Reclaim the LRU-oldest childless cached page (leaf-only: interior
+        nodes still anchor live descendants' chain keys)."""
+        for p in self._lru:
+            if self._nchild.get(p, 0) == 0:
+                del self._lru[p]
+                parent, chunk = self._key.pop(p)
+                del self._node[(parent, chunk)]
+                del self._nchild[p]
+                if parent:
+                    self._nchild[parent] -= 1
+                self._first_tok.pop(p, None)
+                self.reclaimed += 1
+                return p
+        raise RuntimeError("reclaimable LRU holds no leaf -- trie invariant "
+                           "broken (a referenced child of a zero-ref parent)")
 
 
 def kv_cache_bytes(cfg: ModelConfig, batch: int, max_len: int, *,
@@ -270,7 +442,7 @@ class ContinuousScheduler(_SchedulerBase):
                  eos_id: int = -1, pad_id: int = 0,
                  moe_impl: str = "dense", cache_mode: str = "contiguous",
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 cache_dtype=jnp.bfloat16):
+                 cache_dtype=jnp.bfloat16, prefix_cache: bool = False):
         super().__init__(params, cfg, policy, batch=batch, max_len=max_len,
                          eos_id=eos_id, pad_id=pad_id, moe_impl=moe_impl)
         assert prefill_len <= max_len
@@ -285,10 +457,14 @@ class ContinuousScheduler(_SchedulerBase):
                 m == "attn" for m, _ in cfg.block_pattern):
             raise ValueError("paged KV cache requires full-attention layers "
                              "(sliding-window rings cannot be paged)")
+        if prefix_cache and cache_mode == "contiguous":
+            raise ValueError("prefix_cache requires a paged cache_mode "
+                             "(sharing works at page granularity)")
         self.prefill_len = prefill_len
         self.cache_mode = cache_mode
         self.cache_dtype = cache_dtype
         self.page_size = page_size
+        self.prefix_cache = prefix_cache
         self.max_pages = -(-max_len // page_size)      # table width per slot
         if cache_mode == "contiguous":
             self.num_pages = 0
@@ -303,7 +479,9 @@ class ContinuousScheduler(_SchedulerBase):
             self.paged_cfg = T.PagedCacheConfig(
                 page_size=page_size, num_pages=self.num_pages,
                 quantized=(cache_mode == "paged_int8"))
-            self.allocator = PageAllocator(self.num_pages)
+            self.allocator = PageAllocator(self.num_pages,
+                                           page_size=page_size,
+                                           prefix_cache=prefix_cache)
         # rids whose decode was restarted by a preemption (their outputs
         # legitimately diverge from an uninterrupted run: the re-prefill
         # buckets prompt+generated, truncating beyond prefill_len)
@@ -311,6 +489,14 @@ class ContinuousScheduler(_SchedulerBase):
         self._prefill = jax.jit(
             lambda p, t, l, s, i: prefill_into_slot(
                 p, t, l, s, i, cfg, policy, moe_impl=moe_impl))
+        # suffix prefill (resume at a cached page-aligned prefix) and the
+        # copy-on-write page duplication, both jit-stable: start / length /
+        # slot / page ids are traced scalars
+        self._prefill_sfx = jax.jit(
+            lambda p, t, st, l, s, i: prefill_into_slot(
+                p, t, l, s, i, cfg, policy, moe_impl=moe_impl, start=st))
+        self._copy_page = jax.jit(
+            lambda s, src, dst, valid: T.copy_page(s, src, dst, valid))
 
     def submit(self, req: Request):
         need = min(len(req.prompt), self.prefill_len) + req.max_new_tokens
@@ -420,22 +606,84 @@ class ContinuousScheduler(_SchedulerBase):
                     prompt, budget, out_prefix = resume.pop(
                         req.rid, (req.prompt, req.max_new_tokens, []))
                     toks, length = self._bucket(prompt)
+                    ptoks = np.asarray(prompt, np.int32)[-self.prefill_len:]
+                    shared: List[int] = []
+                    covered, ftok = 0, None
                     if self.allocator is not None:
+                        ps = self.page_size
                         # pages for the prompt + the first decode write;
                         # later pages are grown on demand
-                        need = -(-(length + 1) // self.page_size)
-                        pages = self.allocator.alloc(need)
+                        need = -(-(length + 1) // ps)
+                        if self.prefix_cache:
+                            self.stats.prefix_lookups += 1
+                            shared, covered, ftok = \
+                                self.allocator.match_prefix(ptoks)
+                            if shared and covered == length and ftok is None:
+                                # page-aligned full match, but no cached
+                                # first token for this node (it was interior
+                                # to every registration): re-run the last
+                                # chunk as a suffix prefill into a private
+                                # page; registration below then caches the
+                                # token so the next identical prompt is a
+                                # true full hit
+                                shared = shared[:-1]
+                                covered = len(shared) * ps
+                            if shared and covered < length and \
+                                    covered + self.prefill_len > self.max_len:
+                                # the static suffix bucket would overrun the
+                                # cache extent (the contiguous scratch write
+                                # clamps, silently shifting suffix KV): fall
+                                # back to a full private prefill
+                                shared, covered, ftok = [], 0, None
+                        # ref the matched chain BEFORE alloc -- alloc must
+                        # not reclaim pages this admission is about to map
+                        self.allocator.ref(shared)
+                        pages = self.allocator.alloc(need - len(shared))
                         if pages is None:
+                            if shared:
+                                self.allocator.free(shared)
                             resume.setdefault(
                                 req.rid, (prompt, budget, out_prefix))
                             break  # pool dry: wait for an eviction
-                        slot_pages[i] = pages
-                        state = self._write_table_row(state, i, pages)
+                        slot_pages[i] = list(shared) + pages
+                        state = self._write_table_row(state, i,
+                                                      slot_pages[i])
                     pending.pop(0)
-                    logits, state = self._prefill(
-                        self.params, toks, length, state, i)
-                    tok0 = int(np.argmax(np.asarray(logits)))
-                    self.stats.prefills += 1
+                    if shared:
+                        self.stats.prefix_hits += 1
+                        self.stats.pages_shared += len(shared)
+                        self.stats.prefill_tokens_saved += covered
+                    if shared and covered == length:
+                        # full hit: every prompt token is served from cached
+                        # pages and the first greedy token is cached with
+                        # the end node (greedy decode is deterministic) --
+                        # skip the prefill jit entirely, just advance the
+                        # slot's device-side decode position
+                        self.stats.prefix_full_hits += 1
+                        state = dict(state,
+                                     pos=state["pos"].at[i].set(length))
+                        tok0 = int(ftok)
+                    else:
+                        if covered:
+                            sfx = ptoks[covered:]
+                            stoks = np.full((1, self.prefill_len),
+                                            self.pad_id, np.int32)
+                            stoks[0, : len(sfx)] = sfx
+                            logits, state = self._prefill_sfx(
+                                self.params, jnp.asarray(stoks), covered,
+                                length - covered, state, i)
+                            self.stats.prefill_tokens += length - covered
+                        else:
+                            logits, state = self._prefill(
+                                self.params, toks, length, state, i)
+                            self.stats.prefill_tokens += length
+                        tok0 = int(np.argmax(np.asarray(logits)))
+                        self.stats.prefills += 1
+                        if self.allocator is not None and self.prefix_cache:
+                            self.allocator.register_prefix(
+                                ptoks,
+                                slot_pages[i][: -(-length // self.page_size)],
+                                tok0)
                     self.stats.useful_tokens += 1  # prefill's first token
                     now = time.perf_counter() - t0
                     if not req.first_token_s:  # keep it across preemptions
@@ -472,6 +720,34 @@ class ContinuousScheduler(_SchedulerBase):
                         active = [j for j in range(self.batch)
                                   if slots[j] is not None]
                         preempt(max(active, key=lambda j: admit_seq[j]))
+                    # copy-on-write: this step's token write lands in a page
+                    # a sibling slot also maps (refcount > 1, e.g. the
+                    # partial last page of a shared prompt) -- duplicate it
+                    # into a private page and repoint the block-table row
+                    # BEFORE the decode write, so siblings never see the
+                    # divergence.  Rows past the slot's valid extent restart
+                    # from zero in the copy (and int8 copies restart their
+                    # scale -- the recycled-page rule).  A preemption inside
+                    # the loop can itself drop the refcount to 1, in which
+                    # case no copy is needed any more.
+                    while slots[i] is not None and self.allocator.refcount(
+                            slot_pages[i][kv_next[i] // self.page_size]) > 1:
+                        pg = self.allocator.alloc(1)
+                        if pg is None:
+                            active = [j for j in range(self.batch)
+                                      if slots[j] is not None]
+                            preempt(max(active, key=lambda j: admit_seq[j]))
+                            continue
+                        pi = kv_next[i] // self.page_size
+                        old = slot_pages[i][pi]
+                        state = self._copy_page(
+                            state, old, pg[0],
+                            kv_next[i] % self.page_size)
+                        slot_pages[i][pi] = pg[0]
+                        state = self._write_table_row(state, i,
+                                                      slot_pages[i])
+                        self.allocator.free([old])
+                        self.stats.cow_copies += 1
                 if not any(s is not None for s in slots):
                     continue  # everyone preempted: back to admission
             # --- one decode step for the whole batch, slots independent ---

@@ -134,14 +134,25 @@ def _cache_geometry(state):
     return max_len, cache_dtype, enc_len, paged
 
 
-def _scatter_row_into_pages(live, row, slot, length=None, width=None):
+def _scatter_row_into_pages(live, row, slot, length=None, width=None,
+                            start=None):
     """Scatter a single-row contiguous cache (n_blocks, 1, cap, KV, Dh) into
     the pages that ``block_table[:, slot]`` names: layers.paged_prefill_write
     (the whole-batch prefill scatter, including int8 quantisation, pad-row
     zeroing past ``length`` and the trash-page overflow convention) vmapped
     over the stacked block axis.  ``width`` (the static prefill bucket)
     limits the scatter to the pages the prefill actually filled -- writing
-    the whole capacity would amplify admission traffic by max_pages/n."""
+    the whole capacity would amplify admission traffic by max_pages/n.
+
+    ``start`` (traced scalar, page-aligned): suffix mode -- write only the
+    pages covering [start, start + width), leaving pages below ``start``
+    (a shared prefix-cache hit, possibly refcounted by sibling slots)
+    untouched.  Re-scattering them would be wrong twice over: a redundant
+    write at best, and for int8 pages a requantisation round-trip that
+    perturbs values siblings are still reading.  The page-index gather is
+    clipped (jnp.take with traced indices clamps) and table overflow is
+    redirected to the trash page 0, so shapes stay static under jit.
+    """
     from repro.models import layers as L
     ps = live["k_pages"].shape[2]
     quant = "k_scale" in live
@@ -150,6 +161,17 @@ def _scatter_row_into_pages(live, row, slot, length=None, width=None):
     cap = row["k"].shape[2]
     aligned = min(cap, -(-(width or cap) // ps) * ps)
     pids = jnp.take(live["block_table"], slot, axis=1)        # (n_blocks, mp)
+    rk, rv = row["k"][:, 0, :aligned], row["v"][:, 0, :aligned]
+    if start is not None:
+        mp = pids.shape[1]
+        n_s = aligned // ps                  # static page count of the bucket
+        s0 = jnp.asarray(start).astype(jnp.int32)
+        idx = s0 // ps + jnp.arange(n_s, dtype=jnp.int32)     # (n_s,)
+        sel = jnp.take(pids, jnp.clip(idx, 0, mp - 1), axis=1)
+        pids = jnp.where(idx[None, :] < mp, sel, 0)           # -> trash page
+        ridx = jnp.clip(s0 + jnp.arange(n_s * ps), 0, cap - 1)
+        rk = jnp.take(row["k"][:, 0], ridx, axis=1)
+        rv = jnp.take(row["v"][:, 0], ridx, axis=1)
 
     def one_layer(kp, vp, bt_row, rk, rv, *scales):
         pc = {"k_pages": kp, "v_pages": vp, "block_table": bt_row[None]}
@@ -158,16 +180,44 @@ def _scatter_row_into_pages(live, row, slot, length=None, width=None):
         out = L.paged_prefill_write(pc, rk[None], rv[None], valid_len=vlen)
         return tuple(out[k] for k in keys)
 
-    args = [live["k_pages"], live["v_pages"], pids,
-            row["k"][:, 0, :aligned], row["v"][:, 0, :aligned]]
+    args = [live["k_pages"], live["v_pages"], pids, rk, rv]
     if quant:
         args += [live["k_scale"], live["v_scale"]]
     new = jax.vmap(one_layer)(*args)
     return dict(live, **dict(zip(keys, new)))
 
 
+def _gather_pages_into_row(live, slot):
+    """Inverse of ``_scatter_row_into_pages``: read the pages that
+    ``block_table[:, slot]`` names back into a single contiguous row
+    (n_blocks, 1, mp*ps, KV, Dh), dequantising int8 pages through their
+    scales.  All ``max_pages`` rows are gathered for static shapes; rows
+    past the slot's true length are garbage the suffix prefill masks via
+    ``kv_len`` (and overwrites in [start, start+P))."""
+    quant = "k_scale" in live
+    pids = jnp.take(live["block_table"], slot, axis=1)        # (n_blocks, mp)
+
+    def one_layer(kp, vp, bt_row, *scales):
+        k = jnp.take(kp, bt_row, axis=0)                      # (mp, ps, KV, Dh)
+        v = jnp.take(vp, bt_row, axis=0)
+        if scales:
+            ks = jnp.take(scales[0], bt_row, axis=0)          # (mp, KV)
+            vs = jnp.take(scales[1], bt_row, axis=0)
+            k = k.astype(jnp.float32) * ks[:, None, :, None]
+            v = v.astype(jnp.float32) * vs[:, None, :, None]
+        mp, ps, kv, dh = k.shape
+        return (k.reshape(1, mp * ps, kv, dh),
+                v.reshape(1, mp * ps, kv, dh))
+
+    args = [live["k_pages"], live["v_pages"], pids]
+    if quant:
+        args += [live["k_scale"], live["v_scale"]]
+    return jax.vmap(one_layer)(*args)
+
+
 def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
-                      policy: Policy, *, moe_impl: str = "dense", **kw):
+                      policy: Policy, *, moe_impl: str = "dense",
+                      start=None, **kw):
     """Prefill ONE request and scatter its KV into live cache slot ``slot``.
 
     tokens: (1, P) right-padded prompt (P is the static prefill bucket, so
@@ -190,6 +240,18 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
     arch must be attention-only -- ``lengths`` masking covers KV slots, but
     pad tokens past ``length`` would still advance a recurrent (mamba/rwkv)
     scan and corrupt the slot's state.
+
+    ``start`` (traced scalar, page-aligned, paged states only): prefix-cache
+    suffix mode.  The slot's block table already maps ``start`` cached
+    positions (shared pages the scheduler mapped in at admission); ``tokens``
+    holds only the UNCACHED suffix (true length ``length``) and the forward
+    runs over just those P positions -- the cached prefix is gathered into
+    the scratch row's KV so suffix queries attend across it, and the scatter
+    back touches only the suffix pages (shared prefix pages are never
+    rewritten; see ``_scatter_row_into_pages``).  Caller must guarantee
+    ``start + P <= max_len``: the contiguous scratch write clamps at the
+    extent, which would silently shift suffix KV (the scheduler falls back
+    to a full prefill when the geometry doesn't fit).
     """
     b1, p = tokens.shape
     assert b1 == 1, "prefill_into_slot takes a single request"
@@ -206,11 +268,42 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
         if "cache" in st and "k" in st["cache"]:
             assert p <= st["cache"]["k"].shape[2], \
                 "prefill bucket exceeds a (windowed) cache length"
+    slot_i = jnp.asarray(slot).astype(jnp.int32)
+    if start is not None:
+        assert paged is not None, "suffix prefill requires a paged cache"
+        row = T.init_decode_state(cfg, 1, max_len, cache_dtype,
+                                  enc_len=enc_len)
+        blocks_row = []
+        for live_st, row_st in zip(state["blocks"], row["blocks"]):
+            assert "cache" in live_st and "k_pages" in live_st["cache"], \
+                "suffix prefill requires every attention layer to be paged"
+            gk, gv = _gather_pages_into_row(live_st["cache"], slot_i)
+            c = dict(row_st["cache"],
+                     k=gk.astype(row_st["cache"]["k"].dtype),
+                     v=gv.astype(row_st["cache"]["v"].dtype))
+            blocks_row.append(dict(row_st, cache=c))
+        row = dict(row, blocks=tuple(blocks_row))
+        logits, row = T.prefill_suffix(
+            params, tokens, start, length, cfg, policy, state=row,
+            moe_impl=moe_impl)
+        blocks = []
+        for live_st, row_st in zip(state["blocks"], row["blocks"]):
+            d = {k: jax.lax.dynamic_update_slice_in_dim(
+                     live_st[k], row_st[k].astype(live_st[k].dtype), slot_i,
+                     axis=1)
+                 for k in live_st if k != "cache"}
+            d["cache"] = _scatter_row_into_pages(
+                live_st["cache"], row_st["cache"], slot_i, length, width=p,
+                start=start)
+            blocks.append(d)
+        pos = jax.lax.dynamic_update_slice(
+            state["pos"], row["pos"].astype(state["pos"].dtype), (slot_i,))
+        return logits[0], {"pos": pos, "blocks": tuple(blocks)}
     row = T.init_decode_state(cfg, 1, max_len, cache_dtype, enc_len=enc_len)
     logits, row = T.prefill(
         params, tokens, cfg, policy, state=row,
         lengths=jnp.asarray(length).reshape((1,)), moe_impl=moe_impl, **kw)
-    slot = jnp.asarray(slot).astype(jnp.int32)
+    slot = slot_i
 
     def scatter_row(live, new):
         # block-state leaves are (n_blocks, B, ...): write batch row `slot`

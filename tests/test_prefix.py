@@ -1,0 +1,315 @@
+"""Prefix caching: suffix prefill parity, copy-on-write page duplication,
+refcount/trie invariants under churn, scheduler-level shared-prefix
+correctness (bit-exact vs the unshared baseline), full-hit TTFT accounting,
+and cached-page reclaim running ahead of preemption."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serve.scheduler import ContinuousScheduler, PageAllocator, Request
+from repro.serve.serve_step import prefill_into_slot
+
+POL = make_policy("f32")
+
+
+def _cfg():
+    return smoke_variant(get_config("deepseek-7b"))
+
+
+# ---------------------------------------------------------------------------
+# Suffix prefill: resume at a cached page-aligned offset
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_suffix_prefill_matches_full_prefill(quantized):
+    """Prefilling a prompt in two chunks -- the first as a normal prefill,
+    the rest as a suffix prefill resuming at the page boundary -- must
+    reproduce the one-shot full prefill: identical greedy ids over decode,
+    and logits within the cache's stated tolerance."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    max_len, ps, plen, cut = 48, 8, 13, 8
+    prompt = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (plen,), 0,
+                           cfg.vocab_size), np.int32)
+
+    def bucketed(tokens, width):
+        t = np.zeros((1, width), np.int32)
+        t[0, : len(tokens)] = tokens
+        return jnp.asarray(t)
+
+    state = T.init_decode_state(
+        cfg, 2, max_len, jnp.float32,
+        paged=T.PagedCacheConfig(page_size=ps, num_pages=13,
+                                 quantized=quantized))
+    state = T.set_block_tables(state, [[1, 2, 3, 4, 5, 6],
+                                       [7, 8, 9, 10, 11, 12]])
+    # slot 0: the whole prompt in one go
+    lg_full, state = prefill_into_slot(
+        params, bucketed(prompt, 16), plen, state, 0, cfg, POL)
+    # slot 1: first page as a normal prefill, the rest resumed at `cut`
+    _, state = prefill_into_slot(
+        params, bucketed(prompt[:cut], cut), cut, state, 1, cfg, POL)
+    lg_sfx, state = prefill_into_slot(
+        params, bucketed(prompt[cut:], 16), plen - cut, state, 1, cfg, POL,
+        start=cut)
+    tol = 0.05 if quantized else 2e-3
+    np.testing.assert_allclose(np.asarray(lg_sfx), np.asarray(lg_full),
+                               rtol=tol, atol=tol)
+    cur = np.full((2, 1), int(jnp.argmax(lg_full)), np.int32)
+    for _ in range(4):  # both slots decode the same continuation
+        lg, state = T.decode_step(params, jnp.asarray(cur), state, cfg, POL,
+                                  moe_impl="dense")
+        a, b = int(jnp.argmax(lg[0])), int(jnp.argmax(lg[1]))
+        np.testing.assert_allclose(np.asarray(lg[1]), np.asarray(lg[0]),
+                                   rtol=tol, atol=tol)
+        if not quantized:
+            assert a == b
+        cur[0, 0] = cur[1, 0] = a
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write page duplication
+# ---------------------------------------------------------------------------
+
+def test_copy_page_cow_zeroes_dead_rows_and_restarts_int8_scale():
+    rng = np.random.default_rng(0)
+    nb, pool, ps, kv, dh = 2, 4, 4, 2, 8
+    # float pool
+    pc = {"k_pages": jnp.asarray(rng.normal(size=(nb, pool, ps, kv, dh)),
+                                 jnp.float32),
+          "v_pages": jnp.asarray(rng.normal(size=(nb, pool, ps, kv, dh)),
+                                 jnp.float32)}
+    out = L.copy_page_cow(pc, 1, 3, 3)
+    np.testing.assert_array_equal(np.asarray(out["k_pages"][:, 3, :3]),
+                                  np.asarray(pc["k_pages"][:, 1, :3]))
+    assert not np.any(np.asarray(out["k_pages"][:, 3, 3:]))  # dead rows
+    np.testing.assert_array_equal(  # source page untouched
+        np.asarray(out["k_pages"][:, 1]), np.asarray(pc["k_pages"][:, 1]))
+    # int8 pool: a huge-magnitude dead row must not leak into the copy's
+    # restarted scale
+    pages = jnp.asarray(rng.integers(-20, 21, (nb, pool, ps, kv, dh)),
+                        jnp.int8)
+    pages = pages.at[:, 1, 3].set(127)           # dead row at full scale
+    scales = jnp.full((nb, pool, kv), 0.5, jnp.float32)
+    qc = {"k_pages": pages, "v_pages": pages,
+          "k_scale": scales, "v_scale": scales}
+    qout = L.copy_page_cow(qc, 1, 3, 3)
+    # scale restarted from the 3 valid rows (amax <= 20 * 0.5 = 10), far
+    # below the dead row's 127 * 0.5
+    assert float(jnp.max(qout["k_scale"][:, 3])) <= 10.0 / 127.0 + 1e-6
+    want = np.asarray(pages[:, 1, :3], np.float32) * 0.5
+    got = (np.asarray(qout["k_pages"][:, 3, :3], np.float32) *
+           np.asarray(qout["k_scale"][:, 3])[:, None, :, None])
+    np.testing.assert_allclose(got, want, atol=float(np.abs(want).max()) /
+                               254.0 + 1e-6)
+    assert not np.any(np.asarray(qout["k_pages"][:, 3, 3:]))
+
+
+# ---------------------------------------------------------------------------
+# Allocator: refcounts, prefix trie, LRU reclaim
+# ---------------------------------------------------------------------------
+
+def test_allocator_refcount_and_prefix_churn():
+    """Admission/eviction/sharing churn: conservation holds with the
+    reclaimable LRU counted, refcounts never go negative, the trash page is
+    never handed out or matched, and draining returns the pool."""
+    rng = np.random.default_rng(0)
+    ps = 4
+    alloc = PageAllocator(33, page_size=ps, prefix_cache=True)
+    assert alloc.available == 32
+    vocab = 6   # tiny vocab -> frequent prefix collisions
+    live = {}   # key -> (pages, shared_count)
+    for step in range(3000):
+        if live and rng.random() < 0.45:
+            key = rng.choice(list(live))
+            alloc.free(live.pop(key)[0])
+        else:
+            toks = rng.integers(0, vocab,
+                                size=int(rng.integers(1, 4 * ps + 1)),
+                                dtype=np.int32)
+            shared, covered, _ = alloc.match_prefix(toks)
+            need = -(-(len(toks) + 1) // ps)
+            alloc.ref(shared)
+            fresh = alloc.alloc(need - len(shared))
+            if fresh is None:
+                if shared:
+                    alloc.free(shared)
+                continue
+            assert 0 not in fresh and 0 not in shared
+            pages = list(shared) + fresh
+            alloc.register_prefix(toks, pages[: -(-len(toks) // ps)],
+                                  int(rng.integers(vocab)))
+            live[step] = (pages, len(shared))
+        # conservation: free + reclaimable-cached + referenced == pool
+        assert (len(alloc._free) + alloc.cached + alloc.in_use == 32)
+        assert all(n > 0 for n in alloc._ref.values())
+        assert alloc.refcount(0) == 0      # trash page never refcounted
+    for pages, _ in live.values():
+        alloc.free(pages)
+    assert alloc.in_use == 0               # drained: nothing referenced
+    assert len(alloc._free) + alloc.cached == 32
+    with pytest.raises(ValueError):
+        alloc.free([0])                    # foreign (reserved) page
+
+
+def test_allocator_reclaims_cached_leaves_before_refusing():
+    ps = 4
+    alloc = PageAllocator(9, page_size=ps, prefix_cache=True)  # 8 usable
+    toks = np.arange(3 * ps, dtype=np.int32)   # 3-page chain
+    pages = alloc.alloc(3)
+    alloc.register_prefix(toks, pages, 7)
+    alloc.free(pages)                          # chain parked in the LRU
+    assert alloc.cached == 3 and alloc.available == 8
+    got = alloc.alloc(7)                       # needs 2 reclaims
+    assert got is not None and alloc.reclaimed == 2
+    # leaf-first: the chain root survives, its descendants were sacrificed
+    assert alloc.cached == 1
+    m, covered, _ = alloc.match_prefix(toks)
+    assert covered == ps                       # only the root still matches
+    # double free of an already-zero cached page still raises
+    with pytest.raises(ValueError):
+        alloc.free([m[0]])
+
+
+def test_allocator_full_hit_returns_first_token():
+    ps = 4
+    alloc = PageAllocator(9, page_size=ps, prefix_cache=True)
+    toks = np.asarray([1, 2, 3, 4, 5, 6], np.int32)   # partial last chunk
+    pages = alloc.alloc(2)
+    alloc.register_prefix(toks, pages, first_tok=42)
+    m, covered, ftok = alloc.match_prefix(toks)
+    assert m == pages and covered == 6 and ftok == 42
+    # longer prompt sharing the partial tokens must NOT match the partial
+    # node (its page only holds 2 tokens of KV at those positions)
+    m2, covered2, ftok2 = alloc.match_prefix(
+        np.asarray([1, 2, 3, 4, 5, 6, 7, 8, 9], np.int32))
+    assert covered2 == ps and ftok2 is None
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: shared-prefix decode is bit-exact vs the unshared baseline
+# ---------------------------------------------------------------------------
+
+def _shared_trace(cfg, n=10, seed=0, head_len=20, repeats=2):
+    """Requests in 2 groups sharing a common head; the last ``repeats`` are
+    exact duplicates of an earlier prompt (full-hit + COW pressure)."""
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, cfg.vocab_size, size=head_len, dtype=np.int32)
+             for _ in range(2)]
+    dup = np.concatenate(
+        [heads[0], rng.integers(0, cfg.vocab_size, size=7, dtype=np.int32)])
+    reqs = []
+    for i in range(n):
+        if i >= n - repeats:
+            prompt = dup
+        else:
+            prompt = np.concatenate(
+                [heads[i % 2],
+                 rng.integers(0, cfg.vocab_size,
+                              size=int(rng.integers(2, 13)),
+                              dtype=np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(4, 9))))
+    return reqs
+
+
+def _run_sched(params, cfg, *, prefix_cache, cache_mode="paged", **kw):
+    sched = ContinuousScheduler(
+        params, cfg, POL, batch=4, max_len=72, prefill_len=32,
+        cache_mode=cache_mode, page_size=16, prefix_cache=prefix_cache, **kw)
+    for r in _shared_trace(cfg):
+        sched.submit(r)
+    done = sched.run()
+    return sched, {r.rid: np.asarray(r.output) for r in done}
+
+
+def test_shared_prefix_outputs_bit_exact_vs_unshared():
+    """Prefix sharing (partial hits, full hits and COW divergence all
+    exercised) changes nothing about the tokens produced."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    base, want = _run_sched(params, cfg, prefix_cache=False)
+    sched, got = _run_sched(params, cfg, prefix_cache=True)
+    st = sched.stats
+    assert st.prefix_hits > 0 and st.prefix_full_hits > 0
+    assert st.cow_copies > 0              # duplicates really diverged
+    assert st.prefill_tokens_saved > 0
+    assert st.prefill_tokens < base.stats.prefill_tokens
+    assert sched.allocator.in_use == 0    # no leaked pages after drain
+    assert want.keys() == got.keys()
+    for rid in want:
+        np.testing.assert_array_equal(got[rid], want[rid], err_msg=str(rid))
+
+
+def test_shared_prefix_int8_logit_bounded_outputs():
+    """int8 pages: shared-prefix serving completes, shares pages, and leaks
+    nothing; outputs may legitimately differ from the unshared run only
+    through bounded requantisation error (suffix-parity logit bound is
+    asserted in test_suffix_prefill_matches_full_prefill)."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sched, got = _run_sched(params, cfg, prefix_cache=True,
+                            cache_mode="paged_int8")
+    st = sched.stats
+    assert st.prefix_hits > 0 and st.prefill_tokens_saved > 0
+    assert sched.allocator.in_use == 0
+    assert len(got) == 10
+
+
+def test_full_hit_skips_prefill_but_records_ttft():
+    """A fully-cached prompt skips the prefill jit; its first-token latency
+    must still be recorded arrival-relative (and sane)."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sched = ContinuousScheduler(
+        params, cfg, POL, batch=2, max_len=72, prefill_len=32,
+        cache_mode="paged", page_size=16, prefix_cache=True)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab_size, size=23, dtype=np.int32)
+    reqs = [Request(rid=i, prompt=prompt, max_new_tokens=4,
+                    arrival_s=0.05 * i) for i in range(4)]
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    st = sched.stats
+    assert st.prefix_full_hits >= 1
+    assert st.prefills < len(done)        # full hits skipped the prefill
+    for r in done:
+        assert r.first_token_s > 0.0      # recorded even without a prefill
+        assert r.first_token_s <= r.latency_s + 1e-9
+    # full hits produce identical outputs to the request that seeded them
+    for r in done[1:]:
+        np.testing.assert_array_equal(r.output[: len(done[0].output)],
+                                      done[0].output[: len(r.output)])
+
+
+def test_starved_pool_reclaims_cached_pages_before_preempting():
+    """Under pool pressure, zero-ref cached prefix pages are LRU-reclaimed
+    to feed admissions; preemption stays at zero because the cache always
+    yields before live slots do."""
+    cfg = _cfg()
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    # 12 usable pages, batch 2: each admission needs <= 3 pages; the cache
+    # fills with drained requests' pages and must give them back
+    sched = ContinuousScheduler(
+        params, cfg, POL, batch=2, max_len=48, prefill_len=16,
+        cache_mode="paged", page_size=8, num_pages=13, prefix_cache=True)
+    rng = np.random.default_rng(4)
+    heads = [rng.integers(0, cfg.vocab_size, size=8, dtype=np.int32)
+             for _ in range(3)]
+    for i in range(9):
+        prompt = np.concatenate(
+            [heads[i % 3], rng.integers(0, cfg.vocab_size, size=5,
+                                        dtype=np.int32)])
+        sched.submit(Request(rid=i, prompt=prompt, max_new_tokens=6))
+    done = sched.run()
+    assert len(done) == 9
+    assert sched.allocator.reclaimed > 0      # cache yielded pages
+    assert sched.stats.preemptions == 0       # ... before any preemption
+    assert sched.allocator.in_use == 0
