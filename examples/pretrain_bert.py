@@ -45,6 +45,9 @@ def main():
     ap.add_argument("--dp", action="store_true",
                     help="paper-faithful pure-DP shard_map mode")
     ap.add_argument("--workdir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume each phase from its newest valid "
+                         "checkpoint (needs a stable --workdir)")
     args = ap.parse_args()
 
     cfg = smoke_variant(get_config("bert-large"), d_model=args.d_model,
@@ -87,12 +90,19 @@ def main():
         if state is None:
             state = init_train_state(params, make_policy(args.precision),
                                      tcfg)
+        # per-phase checkpoint dirs: step numbering restarts each phase, so
+        # a shared dir would alias phase-1 and phase-2 checkpoints
         state, history = train_loop(
             step, state, iter(loader), total_steps=phase.steps,
             log_every=max(1, phase.steps // 10),
-            ckpt_dir=f"{workdir}/ckpt", ckpt_every=max(10, phase.steps // 2),
+            ckpt_dir=f"{workdir}/ckpt/{phase.name}",
+            ckpt_every=max(10, phase.steps // 2),
+            resume=args.resume,
+            config_fingerprint=f"bert:{phase.name}:{args.precision}",
             tokens_per_step=phase.global_batch * phase.seq_len)
-        logger.info("%s final loss: %.4f", phase.name, history[-1]["loss"])
+        if history:
+            logger.info("%s final loss: %.4f", phase.name,
+                        history[-1]["loss"])
     logger.info("two-phase pretraining complete; checkpoints in %s/ckpt",
                 workdir)
 

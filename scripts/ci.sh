@@ -6,6 +6,7 @@
 #   bash scripts/ci.sh serve      # 2-device serve example smoke only
 #   bash scripts/ci.sh paged      # paged KV-cache smoke (tiny pool)
 #   bash scripts/ci.sh prefix     # prefix-cache smoke (reclaim-before-preempt)
+#   bash scripts/ci.sh faults     # chaos smoke: crash -> resume bit-identical
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
 # in the decode path surface without accelerators.  The paged smoke runs the
@@ -13,6 +14,10 @@
 # so the PageAllocator's grow/evict/reuse/preempt paths run on every PR.
 # The prefix smoke starves the pool under shared-prefix load and asserts the
 # cached zero-ref pages are LRU-reclaimed before any slot is preempted.
+# The faults smoke hard-kills a training run mid-stream via REPRO_FAULTS,
+# resumes from the surviving checkpoint, and asserts the resumed loss
+# trajectory is bit-identical to an uninterrupted reference run; it also
+# tears the newest checkpoint on disk and asserts restore falls back.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -81,6 +86,59 @@ assert len(done) == 9
 assert sched.allocator.reclaimed > 0, "cache never yielded pages"
 assert st.preemptions == 0, "preempted a live slot before draining the cache"
 assert sched.allocator.in_use == 0, "pages leaked after drain"
+EOF
+fi
+
+if [[ "$step" == "all" || "$step" == "faults" ]]; then
+    echo "=== faults chaos smoke: crash -> resume, bit-identical losses ==="
+    work="$(mktemp -d)"
+    trap 'rm -rf "$work"' EXIT
+    train_args=(--arch deepseek-7b --steps 7 --batch 2 --seq 32
+                --precision f32 --log-every 1 --ckpt-every 3)
+    # reference: uninterrupted run
+    python -m repro.launch.train "${train_args[@]}" \
+        --ckpt-dir "$work/ref_ckpt" --loss-log "$work/ref.jsonl"
+    # chaos: hard os._exit at step 5 (no cleanup, no emergency checkpoint --
+    # only the atomic checkpoint at step 3 survives)
+    set +e
+    REPRO_FAULTS="crash_at=5" python -m repro.launch.train \
+        "${train_args[@]}" --ckpt-dir "$work/ckpt" --loss-log "$work/loss.jsonl"
+    code=$?
+    set -e
+    [[ "$code" == 43 ]] || { echo "expected crash exit 43, got $code"; exit 1; }
+    # resume: must continue from step 3's checkpoint + data cursor
+    python -m repro.launch.train "${train_args[@]}" \
+        --ckpt-dir "$work/ckpt" --loss-log "$work/loss.jsonl" --resume
+    python - "$work" <<'EOF'
+import json, sys
+from pathlib import Path
+work = Path(sys.argv[1])
+load = lambda p: {json.loads(l)["step"]: json.loads(l)["loss"]
+                  for l in p.read_text().splitlines()}
+ref, got = load(work / "ref.jsonl"), load(work / "loss.jsonl")
+assert sorted(ref) == list(range(1, 8)), sorted(ref)
+for s, loss in ref.items():
+    assert got[s] == loss, f"step {s}: resumed {got[s]!r} != ref {loss!r}"
+print(f"crash->resume OK: {len(ref)} steps bit-identical")
+EOF
+    echo "=== faults chaos smoke: torn-checkpoint fallback ==="
+    python - <<'EOF'
+import glob, tempfile
+import numpy as np
+from pathlib import Path
+from repro.train.checkpoint import (latest_step, restore_checkpoint,
+                                    save_checkpoint)
+from repro.train.faults import torn_write
+d = tempfile.mkdtemp()
+tree = {"w": np.arange(6, dtype=np.float32)}
+save_checkpoint(d, 1, tree)
+p2 = save_checkpoint(d, 2, {"w": tree["w"] * 2})
+torn_write(p2, 64)                      # simulate a kill mid-write
+assert latest_step(d) == 1, "torn checkpoint not skipped"
+got, step = restore_checkpoint(d, tree)
+assert step == 1
+np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
+print("torn-checkpoint fallback OK: restored step 1")
 EOF
 fi
 

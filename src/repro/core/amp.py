@@ -141,3 +141,17 @@ def make_loss_scale(policy: Policy, **kw):
 
 def grads_finite(grads) -> jax.Array:
     return all_finite(grads)
+
+
+def loss_scale_summary(state: LossScaleState) -> dict:
+    """JSON-serializable snapshot of the dynamic loss-scale state.
+
+    Recorded in the checkpoint manifest (train/checkpoint.py) so a resumed
+    run's AMP trajectory is auditable without loading the npz -- the full
+    state itself rides along inside TrainState and restores exactly.
+    """
+    return {
+        "scale": float(jax.device_get(state.scale)),
+        "good_steps": int(jax.device_get(state.good_steps)),
+        "total_skipped": int(jax.device_get(state.total_skipped)),
+    }

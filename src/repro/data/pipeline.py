@@ -135,6 +135,15 @@ class ShardedLoader:
 
     Yields fixed-size batches with per-epoch reshuffling (cheap because the
     shard is worker-local -- the paper's point: no cross-worker I/O).
+
+    The loader is a *resumable iterator*: its cursor (epoch, within-epoch
+    batch offset) round-trips through ``state_dict``/``load_state_dict``,
+    and each epoch's permutation is derived from ``(seed, worker, epoch)``
+    rather than a mutable RNG stream -- so a loader restored mid-epoch
+    continues the EXACT sample sequence of the uninterrupted run (the
+    checkpoint-resume contract in train/trainer.py).  ``iter(loader)``
+    returns the loader itself; repeated iteration continues, it does not
+    restart.
     """
 
     def __init__(self, shard_dir: str, worker: int, n_workers: int,
@@ -152,15 +161,52 @@ class ShardedLoader:
                 self.data = {k: np.concatenate([self.data[k], d[k]])
                              for k in d}
         self.batch = batch
-        self.rng = np.random.default_rng(seed + worker)
+        self.seed, self.worker = seed, worker
+        self._n = len(next(iter(self.data.values())))
+        if self._n < batch:
+            raise ValueError(f"worker {worker}'s shard holds {self._n} "
+                             f"examples < batch {batch}")
+        self._epoch = 0
+        self._offset = 0          # batches already yielded this epoch
+        self._order = self._epoch_order(0)
 
-    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
-        n = len(next(iter(self.data.values())))
-        while True:
-            order = self.rng.permutation(n)
-            for i in range(0, n - self.batch + 1, self.batch):
-                sel = order[i:i + self.batch]
-                yield {k: v[sel] for k, v in self.data.items()}
+    def _epoch_order(self, epoch: int) -> np.ndarray:
+        rng = np.random.default_rng([self.seed, self.worker, epoch])
+        return rng.permutation(self._n)
+
+    @property
+    def batches_per_epoch(self) -> int:
+        return self._n // self.batch
+
+    def state_dict(self) -> Dict[str, int]:
+        """Cursor (epoch, offset) -- everything needed for exact resume;
+        the shuffle RNG is implied by (seed, worker, epoch)."""
+        return {"epoch": self._epoch, "offset": self._offset,
+                "seed": self.seed, "worker": self.worker}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        if state.get("seed", self.seed) != self.seed or \
+                state.get("worker", self.worker) != self.worker:
+            raise ValueError(
+                f"loader cursor was saved for seed/worker "
+                f"({state.get('seed')}, {state.get('worker')}), this "
+                f"loader is ({self.seed}, {self.worker})")
+        self._epoch = int(state["epoch"])
+        self._offset = int(state["offset"])
+        self._order = self._epoch_order(self._epoch)
+
+    def __iter__(self) -> "ShardedLoader":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        if self._offset >= self.batches_per_epoch:
+            self._epoch += 1
+            self._offset = 0
+            self._order = self._epoch_order(self._epoch)
+        i = self._offset * self.batch
+        sel = self._order[i:i + self.batch]
+        self._offset += 1
+        return {k: v[sel] for k, v in self.data.items()}
 
 
 # ---------------------------------------------------------------------------
@@ -186,15 +232,48 @@ def prepare_bert_data(out_dir: str, *, seq_len: int = 128,
     return tok, Path(out_dir) / "index.json"
 
 
+class LMStream:
+    """Synthetic causal-LM stream (Zipfian unigrams) for non-BERT examples.
+
+    A resumable iterator: batch ``i`` is drawn from an RNG derived from
+    ``(seed, i)``, so the stream is a pure function of the cursor and a
+    resumed run (``load_state_dict``) replays the exact batch sequence of
+    an uninterrupted one -- the same contract as ``ShardedLoader``.
+    """
+
+    def __init__(self, key_seed: int, vocab_size: int, batch: int,
+                 seq_len: int):
+        self.seed, self.vocab_size = key_seed, vocab_size
+        self.batch, self.seq_len = batch, seq_len
+        ranks = np.arange(1, vocab_size + 1)
+        self._p = (1.0 / ranks) / np.sum(1.0 / ranks)
+        self._step = 0            # batches already yielded
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self._step, "seed": self.seed}
+
+    def load_state_dict(self, state: Dict[str, int]) -> None:
+        if state.get("seed", self.seed) != self.seed:
+            raise ValueError(
+                f"stream cursor was saved for seed {state.get('seed')}, "
+                f"this stream uses seed {self.seed}")
+        self._step = int(state["step"])
+
+    def __iter__(self) -> "LMStream":
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng([self.seed, self._step])
+        self._step += 1
+        return {"tokens": rng.choice(self.vocab_size,
+                                     size=(self.batch, self.seq_len + 1),
+                                     p=self._p).astype(np.int32)}
+
+
 def lm_batches(key_seed: int, vocab_size: int, batch: int, seq_len: int
-               ) -> Iterator[Dict[str, np.ndarray]]:
-    """Synthetic causal-LM stream (Zipfian unigrams) for non-BERT examples."""
-    rng = np.random.default_rng(key_seed)
-    ranks = np.arange(1, vocab_size + 1)
-    p = (1.0 / ranks) / np.sum(1.0 / ranks)
-    while True:
-        yield {"tokens": rng.choice(vocab_size, size=(batch, seq_len + 1),
-                                    p=p).astype(np.int32)}
+               ) -> LMStream:
+    """Synthetic causal-LM stream; returns a resumable ``LMStream``."""
+    return LMStream(key_seed, vocab_size, batch, seq_len)
 
 
 # ---------------------------------------------------------------------------

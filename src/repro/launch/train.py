@@ -2,16 +2,26 @@
 
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
       --steps 50 --batch 8 --seq 256 [--smoke] [--precision bf16] \
-      [--strategy psum|ring|hierarchical|bucketed] [--accum 4]
+      [--strategy psum|ring|hierarchical|bucketed] [--accum 4] \
+      [--ckpt-dir DIR --ckpt-every 100 --resume] [--loss-log FILE]
 
 ``--smoke`` swaps in the reduced same-family config so any architecture can
 be exercised on CPU.  On a one-device host the mesh is (1, n_devices);
 ``--dp`` selects the paper-faithful pure-data-parallel shard_map path with
 the explicit collective strategy.
+
+Fault tolerance: ``--resume`` restores the newest valid checkpoint in
+``--ckpt-dir`` (including the data-stream cursor, so the resumed loss
+trajectory is bit-identical to an uninterrupted run), and the
+``REPRO_FAULTS`` env var injects deterministic crashes / torn checkpoint
+writes / NaN steps via train/faults.py -- the CI chaos step drives this
+CLI that way.  ``--loss-log`` appends one JSON line per logged step (use
+``--log-every 1`` for the exact-resume comparison).
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import numpy as np
@@ -47,6 +57,12 @@ def main(argv=None):
                     help="ZeRO-1 pure data parallelism (GSPMD mode)")
     ap.add_argument("--moe-impl", default="a2a")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=500)
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest valid checkpoint")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--loss-log", default=None,
+                    help="append {'step','loss'} JSON lines here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -80,10 +96,25 @@ def main(argv=None):
         step_fn, _ = make_train_step_gspmd(cfg, tcfg, mesh, rules, specs_t,
                                            shapes, shape)
 
-    def batches():
-        it = lm_batches(args.seed, cfg.vocab_size, args.batch, args.seq)
-        for b in it:
-            out = {"tokens": b["tokens"]}
+    class BatchStream:
+        """Decorates the LMStream with the extra modality fields while
+        forwarding its resume cursor (state_dict/load_state_dict)."""
+
+        def __init__(self):
+            self.inner = lm_batches(args.seed, cfg.vocab_size, args.batch,
+                                    args.seq)
+
+        def state_dict(self):
+            return self.inner.state_dict()
+
+        def load_state_dict(self, s):
+            self.inner.load_state_dict(s)
+
+        def __iter__(self):
+            return self
+
+        def __next__(self):
+            out = {"tokens": next(self.inner)["tokens"]}
             if cfg.is_encoder_decoder:
                 out["frames"] = 0.1 * np.random.default_rng(0).standard_normal(
                     (args.batch, cfg.enc_seq, cfg.d_model)).astype(np.float32)
@@ -91,13 +122,31 @@ def main(argv=None):
                 out["vision"] = 0.1 * np.random.default_rng(0).standard_normal(
                     (args.batch, cfg.n_vision_tokens,
                      cfg.d_model)).astype(np.float32)
-            yield out
+            return out
+
+    fingerprint = (f"{cfg.arch_id}:p={args.precision}:b={args.batch}x"
+                   f"{args.seq}:opt={args.optimizer}:accum={args.accum}:"
+                   f"seed={args.seed}")
+
+    metrics_hook = None
+    if args.loss_log:
+        def metrics_hook(m):
+            with open(args.loss_log, "a") as f:
+                f.write(json.dumps({"step": m["step"], "loss": m["loss"]})
+                        + "\n")
 
     state, history = train_loop(
-        step_fn, state, batches(), total_steps=args.steps,
-        ckpt_dir=args.ckpt_dir,
+        step_fn, state, BatchStream(), total_steps=args.steps,
+        log_every=args.log_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        resume=args.resume, metrics_hook=metrics_hook,
+        config_fingerprint=fingerprint, seed=args.seed,
         tokens_per_step=args.batch * args.seq)
-    logger.info("final loss: %.4f", history[-1]["loss"])
+    if history:
+        logger.info("final loss: %.4f", history[-1]["loss"])
+    else:
+        logger.info("nothing to do: checkpoint already at %d steps",
+                    args.steps)
     return 0
 
 

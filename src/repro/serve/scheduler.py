@@ -60,9 +60,13 @@ class Request:
     prompt: np.ndarray           # (len,) int32
     max_new_tokens: int = 32
     arrival_s: float = 0.0       # offset from run start (trace replay)
+    deadline_s: Optional[float] = None  # wall-clock budget from arrival;
+    #                              past it the slot is evicted (partial
+    #                              output kept) and stats.timeouts counts it
     output: Optional[np.ndarray] = None
     first_token_s: float = 0.0   # arrival -> first generated token
     latency_s: float = 0.0       # arrival -> completion
+    timed_out: bool = False      # deadline_s exceeded before completion
 
 
 @dataclasses.dataclass
@@ -73,6 +77,7 @@ class ServeStats:
     useful_tokens: int = 0
     wasted_slots: int = 0        # decode slots spent on finished/empty slots
     preemptions: int = 0         # paged: slots evicted to reclaim pages
+    timeouts: int = 0            # requests evicted past their deadline_s
     wall_s: float = 0.0
     decode_s: float = 0.0        # time inside decode steps (post-compile)
     decode_tokens: int = 0       # useful tokens those steps produced
@@ -435,6 +440,13 @@ class ContinuousScheduler(_SchedulerBase):
       tokens folded into the prompt (counted in ``stats.preemptions``;
       tokens already emitted are kept and re-prefilled, though tokens beyond
       the prefill bucket are truncated like any long prompt).
+
+    ``Request.deadline_s`` bounds a request's wall-clock residence: once
+    ``now - arrival_s`` exceeds it the slot is evicted through the normal
+    release path (pages freed, table row pointed back at the trash page),
+    the partial output is returned with ``timed_out=True``, and
+    ``stats.timeouts`` counts it.  Requests whose deadline lapses while
+    still queued are rejected at admission without ever taking pages.
     """
 
     def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
@@ -578,6 +590,17 @@ class ContinuousScheduler(_SchedulerBase):
             done.append(req)
             release(i)
 
+        def expire(i: int, now: float):
+            # deadline exceeded: keep the partial output, evict through the
+            # normal release path (pages freed / table row trashed)
+            req = slots[i]
+            req.output = np.asarray(prefix[i] + gens[i], np.int32)
+            req.latency_s = now - req.arrival_s
+            req.timed_out = True
+            self.stats.timeouts += 1
+            done.append(req)
+            release(i)
+
         def preempt(i: int):
             req = slots[i]
             self.preempted_rids.add(req.rid)
@@ -592,11 +615,30 @@ class ContinuousScheduler(_SchedulerBase):
 
         while pending or any(s is not None for s in slots):
             now = time.perf_counter() - t0
+            # --- deadlines: evict slots whose wall-clock budget is spent ---
+            for i in range(self.batch):
+                req = slots[i]
+                if req is not None and req.deadline_s is not None and \
+                        now - req.arrival_s > req.deadline_s:
+                    expire(i, now)
             # --- admission: refill every empty slot that has an arrival ---
             for i in range(self.batch):
                 while slots[i] is None and pending and \
                         pending[0].arrival_s <= now:
                     req = pending[0]
+                    if req.deadline_s is not None and \
+                            now - req.arrival_s > req.deadline_s:
+                        # expired while queued (or between preemption and
+                        # re-admission): never admitted, no pages held
+                        pending.pop(0)
+                        _, _, out_prefix = resume.pop(
+                            req.rid, (None, 0, []))
+                        req.output = np.asarray(out_prefix, np.int32)
+                        req.latency_s = max(now - req.arrival_s, 0.0)
+                        req.timed_out = True
+                        self.stats.timeouts += 1
+                        done.append(req)
+                        continue
                     if req.max_new_tokens <= 0:
                         pending.pop(0)
                         req.output = np.zeros((0,), np.int32)

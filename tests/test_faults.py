@@ -1,0 +1,420 @@
+"""Fault-tolerant training runtime: atomic checkpoints, exact resume,
+fault injection, supervised train loop, serving deadlines.
+
+The subprocess tests drive ``repro.launch.train`` with ``REPRO_FAULTS``
+set -- the same path the ``faults`` CI chaos step exercises.
+"""
+import glob
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.data.pipeline import ShardedLoader, lm_batches, prepare_lm_data
+from repro.train.checkpoint import (latest_step, load_manifest,
+                                    restore_checkpoint, save_checkpoint,
+                                    validate_checkpoint)
+from repro.train.faults import (FaultInjector, FaultPlan, TransientStepError,
+                                torn_write)
+from repro.train.trainer import NonFiniteBudgetError, train_loop
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ---------------------------------------------------------------------------
+# Atomic, verifiable checkpoints
+# ---------------------------------------------------------------------------
+
+def _tree(v: float):
+    return {"w": np.full((8,), v, np.float32),
+            "b": np.full((2, 3), v + 1, np.float32)}
+
+
+def test_save_is_atomic_and_validates(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0), extra={"cursor": 7})
+    assert not list(tmp_path.glob("*.tmp"))  # no temp residue
+    assert validate_checkpoint(d, 1)
+    man = load_manifest(d, 1)
+    assert man["format"] == 2 and man["extra"]["cursor"] == 7
+    assert len(man["checksums"]) == len(man["names"]) == 2
+
+
+def test_torn_write_falls_back_to_previous_valid(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(1.0))
+    p2 = save_checkpoint(d, 2, _tree(2.0))
+    assert latest_step(d) == 2
+    torn_write(p2, 64)  # truncated npz, manifest intact
+    assert not validate_checkpoint(d, 2)
+    assert latest_step(d) == 1
+    got, step = restore_checkpoint(d, _tree(0.0))
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(got["w"]), _tree(1.0)["w"])
+
+
+def test_checksum_detects_bitflip(tmp_path):
+    d = str(tmp_path)
+    p = save_checkpoint(d, 3, _tree(3.0))
+    raw = bytearray(p.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF  # silent corruption, size unchanged
+    p.write_bytes(bytes(raw))
+    assert not validate_checkpoint(d, 3)
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(d, _tree(0.0))  # no valid checkpoint left
+
+
+def test_no_checkpoint_raises_filenotfound(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_checkpoint(str(tmp_path), _tree(0.0))
+
+
+def test_retention_keeps_newest_valid(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        save_checkpoint(d, s, _tree(float(s)), keep=3)
+    steps = sorted(int(p[-12:-4]) for p in glob.glob(d + "/ckpt_*.npz"))
+    assert steps == [3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Resumable data pipeline
+# ---------------------------------------------------------------------------
+
+def test_sharded_loader_cursor_exact_resume(tmp_path):
+    prepare_lm_data(str(tmp_path), seq_len=16, n_docs=40, vocab_size=512,
+                    n_shards=2)
+    ref = ShardedLoader(str(tmp_path), 0, 1, batch=4, seed=3)
+    # advance past an epoch boundary so epoch/offset/shuffle all matter
+    for _ in range(ref.batches_per_epoch + 3):
+        next(ref)
+    cursor = ref.state_dict()
+    want = [next(ref)["tokens"] for _ in range(5)]
+
+    fresh = ShardedLoader(str(tmp_path), 0, 1, batch=4, seed=3)
+    fresh.load_state_dict(cursor)
+    got = [next(fresh)["tokens"] for _ in range(5)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_sharded_loader_rejects_foreign_cursor(tmp_path):
+    prepare_lm_data(str(tmp_path), seq_len=16, n_docs=40, vocab_size=512,
+                    n_shards=2)
+    ld = ShardedLoader(str(tmp_path), 0, 1, batch=4, seed=3)
+    with pytest.raises(ValueError):
+        ld.load_state_dict({"epoch": 0, "offset": 0, "seed": 99, "worker": 0})
+
+
+def test_lm_stream_cursor_exact_resume():
+    ref = lm_batches(7, 256, 2, 8)
+    for _ in range(5):
+        next(ref)
+    cursor = ref.state_dict()
+    want = [next(ref)["tokens"] for _ in range(4)]
+    fresh = lm_batches(7, 256, 2, 8)
+    fresh.load_state_dict(cursor)
+    got = [next(fresh)["tokens"] for _ in range(4)]
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Supervised train loop (dummy deterministic step: fast, exact)
+# ---------------------------------------------------------------------------
+
+def _dummy_step(state, batch):
+    s = {"w": state["w"] + batch["tokens"].astype(np.float32).mean()}
+    return s, {"loss": float(s["w"].sum()), "skipped": False}
+
+
+def _losses(hist):
+    return [h["loss"] for h in hist]
+
+
+def test_trainer_crash_resume_bit_exact(tmp_path):
+    ref_state = {"w": np.zeros(3, np.float32)}
+    _, ref = train_loop(_dummy_step, ref_state, lm_batches(0, 64, 2, 4),
+                        total_steps=9, log_every=1)
+    d = str(tmp_path)
+    st = {"w": np.zeros(3, np.float32)}
+    # "crash" after 5 steps (checkpoints at 3 and the final at 5)
+    train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4), total_steps=5,
+               log_every=1, ckpt_dir=d, ckpt_every=3)
+    st = {"w": np.zeros(3, np.float32)}
+    _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                         total_steps=9, log_every=1, ckpt_dir=d,
+                         ckpt_every=3, resume=True)
+    assert _losses(hist) == _losses(ref)[5:]  # bit-identical continuation
+
+
+def test_trainer_torn_latest_resumes_from_previous(tmp_path, caplog):
+    d = str(tmp_path)
+    ref_state = {"w": np.zeros(3, np.float32)}
+    _, ref = train_loop(_dummy_step, ref_state, lm_batches(0, 64, 2, 4),
+                        total_steps=9, log_every=1, ckpt_dir=d, ckpt_every=3)
+    torn_write(Path(max(glob.glob(d + "/ckpt_*.npz"))), 32)
+    st = {"w": np.zeros(3, np.float32)}
+    with caplog.at_level("WARNING", logger="repro"):
+        _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                             total_steps=9, log_every=1, ckpt_dir=d,
+                             ckpt_every=3, resume=True)
+    assert any("corrupt" in r.message for r in caplog.records)  # loud, not
+    #                                            a silent restart from 0
+    assert _losses(hist)[-1] == _losses(ref)[-1]
+
+
+def test_trainer_fresh_start_only_when_no_checkpoint(tmp_path, caplog):
+    st = {"w": np.zeros(3, np.float32)}
+    with caplog.at_level("INFO", logger="repro"):
+        _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                             total_steps=3, log_every=1,
+                             ckpt_dir=str(tmp_path), resume=True)
+    assert any("starting fresh" in r.message for r in caplog.records)
+    assert len(hist) == 3
+
+
+def test_nan_skip_budget_aborts(tmp_path):
+    inj = FaultInjector(FaultPlan(nan_at=3, nan_count=5))
+    st = {"w": np.zeros(3, np.float32)}
+    with pytest.raises(NonFiniteBudgetError):
+        train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4), total_steps=9,
+                   log_every=1, max_consecutive_skips=2, faults=inj,
+                   ckpt_dir=str(tmp_path))
+    # the abort left an emergency checkpoint of the last good state
+    step = latest_step(str(tmp_path))
+    assert step is not None
+    assert load_manifest(str(tmp_path), step)["extra"]["emergency"] is True
+
+
+def test_nan_skips_within_budget_surface_as_metrics():
+    inj = FaultInjector(FaultPlan(nan_at=2, nan_count=2))
+    st = {"w": np.zeros(3, np.float32)}
+    _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                         total_steps=6, log_every=1,
+                         max_consecutive_skips=5, faults=inj)
+    assert hist[-1]["total_skips"] == 2
+    assert hist[-1]["consecutive_skips"] == 0  # recovered
+    assert hist[2]["consecutive_skips"] == 2   # at the injection peak
+
+
+def test_transient_failure_retry_then_success():
+    inj = FaultInjector(FaultPlan(fail_at=2, fail_count=2))
+    st = {"w": np.zeros(3, np.float32)}
+    _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                         total_steps=4, log_every=1, faults=inj,
+                         max_retries=2, retry_backoff_s=0.0)
+    assert hist[-1]["retries"] == 2
+    assert len(hist) == 4  # run completed despite the failures
+
+
+def test_transient_failure_exhausts_retries(tmp_path):
+    inj = FaultInjector(FaultPlan(fail_at=2, fail_count=5))
+    st = {"w": np.zeros(3, np.float32)}
+    with pytest.raises(TransientStepError):
+        train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4), total_steps=4,
+                   log_every=1, faults=inj, max_retries=1,
+                   retry_backoff_s=0.0, ckpt_dir=str(tmp_path))
+    assert latest_step(str(tmp_path)) == 1  # emergency ckpt at last good
+
+
+def test_watchdog_flags_injected_slow_step():
+    inj = FaultInjector(FaultPlan(slow_at=5, slow_s=0.3))
+    st = {"w": np.zeros(3, np.float32)}
+    _, hist = train_loop(_dummy_step, st, lm_batches(0, 64, 2, 4),
+                         total_steps=6, log_every=1, faults=inj,
+                         watchdog_factor=5.0)
+    assert hist[-1]["slow_steps"] >= 1
+
+
+def test_fault_plan_from_env():
+    plan = FaultPlan.from_env({"REPRO_FAULTS":
+                               "crash_at=6, torn_at=3,torn_bytes=128"})
+    assert plan.crash_at == 6 and plan.torn_at == 3 and plan.torn_bytes == 128
+    assert FaultPlan.from_env({}) == FaultPlan()
+    assert not FaultPlan.from_env({}).any
+    with pytest.raises(ValueError):
+        FaultPlan.from_env({"REPRO_FAULTS": "bogus=1"})
+
+
+# ---------------------------------------------------------------------------
+# AMP interaction: a real overflow step is skipped, scale backs off,
+# master weights untouched (the trainer observes this; amp.py owns it)
+# ---------------------------------------------------------------------------
+
+def test_f16_overflow_step_skips_update_and_backs_off():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, smoke_variant
+    from repro.configs.base import InputShape, TrainConfig
+    from repro.core.amp import LossScaleState, make_policy
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import api
+    from repro.sharding import make_rules
+    from repro.train.train_step import init_train_state, make_train_step_gspmd
+
+    cfg = smoke_variant(get_config("deepseek-7b"), d_model=128)
+    tcfg = TrainConfig(precision="f16", total_steps=10, warmup_steps=1)
+    shape = InputShape("t", 32, 4, "train")
+    shapes, specs = api.abstract_params(cfg)
+    mesh = make_host_mesh((1, 1), ("data", "model"))
+    step, _ = make_train_step_gspmd(cfg, tcfg, mesh, make_rules(), specs,
+                                    shapes, shape)
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, make_policy("f16"), tcfg)
+    # force an overflowing scale: f16 gradients become inf
+    state = state._replace(loss_scale=LossScaleState(
+        scale=jnp.float32(1e30), good_steps=jnp.int32(0),
+        total_skipped=jnp.int32(0)))
+    master_before = jax.tree_util.tree_map(np.asarray, state.opt.master)
+    batch = api.make_synth_batch(jax.random.PRNGKey(1), cfg, shape)
+    new_state, metrics = step(state, batch)
+    assert float(metrics["skipped"]) == 1.0
+    assert float(new_state.loss_scale.scale) == pytest.approx(0.5e30)
+    assert int(new_state.loss_scale.total_skipped) == 1
+    for a, b in zip(jax.tree_util.tree_leaves(master_before),
+                    jax.tree_util.tree_leaves(new_state.opt.master)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Crash -> resume via the real launcher CLI (subprocess, REPRO_FAULTS)
+# ---------------------------------------------------------------------------
+
+def _run_train(tmp, tag, extra_args, faults="", expect_code=0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    if faults:
+        env["REPRO_FAULTS"] = faults
+    else:
+        env.pop("REPRO_FAULTS", None)
+    args = ["--arch", "deepseek-7b", "--steps", "7", "--batch", "2",
+            "--seq", "32", "--precision", "f32", "--log-every", "1",
+            "--ckpt-dir", f"{tmp}/{tag}_ckpt", "--ckpt-every", "3",
+            "--loss-log", f"{tmp}/{tag}.jsonl"] + extra_args
+    code = textwrap.dedent(f"""
+        from repro.launch.train import main
+        raise SystemExit(main({args!r}))
+    """)
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=500)
+    assert proc.returncode == expect_code, \
+        f"expected exit {expect_code}, got {proc.returncode}:\n" \
+        f"{proc.stdout}\n{proc.stderr}"
+    return proc
+
+
+def _loss_log(path):
+    return {json.loads(l)["step"]: json.loads(l)["loss"]
+            for l in Path(path).read_text().splitlines()}
+
+
+def test_cli_crash_resume_loss_bit_identical(tmp_path):
+    """The acceptance scenario: kill a run mid-training via injected hard
+    crash, resume from the surviving checkpoint, and the loss trajectory
+    is bit-identical to an uninterrupted run (same seed, same data order).
+    """
+    tmp = str(tmp_path)
+    _run_train(tmp, "ref", [])
+    ref = _loss_log(f"{tmp}/ref.jsonl")
+    assert sorted(ref) == list(range(1, 8))
+
+    # crash after step 5: last checkpoint is step 3
+    _run_train(tmp, "chaos", [], faults="crash_at=5", expect_code=43)
+    crashed = _loss_log(f"{tmp}/chaos.jsonl")
+    assert sorted(crashed) == list(range(1, 6))
+    assert latest_step(f"{tmp}/chaos_ckpt") == 3
+
+    _run_train(tmp, "chaos", ["--resume"])  # appends steps 4..7
+    merged = _loss_log(f"{tmp}/chaos.jsonl")
+    for s, loss in ref.items():
+        assert merged[s] == loss, \
+            f"step {s}: resumed {merged[s]!r} != uninterrupted {loss!r}"
+
+
+def test_cli_torn_checkpoint_recovery(tmp_path):
+    """Torn-latest-checkpoint restore falls back to the previous valid one
+    and still reproduces the uninterrupted trajectory."""
+    tmp = str(tmp_path)
+    _run_train(tmp, "ref", [])
+    ref = _loss_log(f"{tmp}/ref.jsonl")
+    # tear the step-6 checkpoint as it is written, then crash: resume must
+    # fall back to step 3
+    _run_train(tmp, "torn", [], faults="torn_at=6,crash_at=6",
+               expect_code=43)
+    assert latest_step(f"{tmp}/torn_ckpt") == 3
+    _run_train(tmp, "torn", ["--resume"])
+    merged = _loss_log(f"{tmp}/torn.jsonl")
+    for s in range(1, 8):
+        assert merged[s] == ref[s]
+
+
+# ---------------------------------------------------------------------------
+# Serving robustness tie-in: per-request deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_eviction_conserves_pages():
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.amp import make_policy
+    from repro.models import transformer as T
+    from repro.serve.scheduler import ContinuousScheduler, Request
+
+    cfg = smoke_variant(get_config("deepseek-7b"))
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sched = ContinuousScheduler(
+        params, cfg, make_policy("f32"), batch=2, max_len=64,
+        prefill_len=8, cache_mode="paged", page_size=8)
+    rng = np.random.default_rng(0)
+    # rid 0: generous budget but a deadline that outlives admission (cache
+    # init is ~0.1s) while the compile-bearing prefill + first decode step
+    # (several seconds) are guaranteed to blow through it -> evicted
+    # mid-decode with its partial output
+    sched.submit(Request(rid=0, max_new_tokens=48, deadline_s=1.0,
+                         prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                             dtype=np.int32)))
+    # rid 1: no deadline, completes normally alongside
+    sched.submit(Request(rid=1, max_new_tokens=4,
+                         prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                             dtype=np.int32)))
+    # rid 2: deadline 0 -> expires while queued, never takes pages
+    sched.submit(Request(rid=2, max_new_tokens=4, deadline_s=0.0,
+                         prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                             dtype=np.int32)))
+    done = sched.run()
+    assert len(done) == 3
+    by_rid = {r.rid: r for r in done}
+    assert by_rid[0].timed_out and len(by_rid[0].output) >= 1  # partial kept
+    assert not by_rid[1].timed_out and len(by_rid[1].output) == 4
+    assert by_rid[2].timed_out and len(by_rid[2].output) == 0
+    assert sched.stats.timeouts == 2
+    # eviction went through the normal release path: nothing leaked
+    assert sched.allocator.in_use == 0
+    assert sched.allocator.available == sched.num_pages - 1
+
+
+def test_deadline_none_never_times_out():
+    import jax
+    from repro.configs import get_config, smoke_variant
+    from repro.core.amp import make_policy
+    from repro.models import transformer as T
+    from repro.serve.scheduler import ContinuousScheduler, Request
+
+    cfg = smoke_variant(get_config("deepseek-7b"))
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    sched = ContinuousScheduler(params, cfg, make_policy("f32"), batch=2,
+                                max_len=32, prefill_len=8)
+    rng = np.random.default_rng(1)
+    for rid in range(3):
+        sched.submit(Request(rid=rid, max_new_tokens=4,
+                             prompt=rng.integers(0, cfg.vocab_size, size=6,
+                                                 dtype=np.int32)))
+    done = sched.run()
+    assert len(done) == 3 and sched.stats.timeouts == 0
+    assert all(not r.timed_out for r in done)
