@@ -24,6 +24,7 @@ MODULES = [
     ("serve", "benchmarks.serve_continuous"),
     ("serve_paged", "benchmarks.serve_paged"),
     ("serve_prefix", "benchmarks.serve_prefix"),
+    ("serve_multiarch", "benchmarks.serve_multiarch"),
 ]
 
 

@@ -1,0 +1,126 @@
+"""One ContinuousScheduler, every architecture: tok/s + state footprint.
+
+  PYTHONPATH=src python benchmarks/serve_multiarch.py \
+      [--batch 4] [--requests 16] [--rate 50] [--out BENCH_serve.json]
+
+Replays the SAME Poisson trace (arrivals + prompt lengths + max_new draws
+shared via --seed) through ``ContinuousScheduler`` for one representative
+config per architecture family and reports tokens/s plus the decode-state
+footprint split the slot-state contract exposes: ``cache_bytes``
+(self-attention KV -- pages or contiguous stripes) vs ``state_bytes``
+(per-slot recurrent scan carries and cross-attention caches).
+
+The interesting shape: rwkv6's footprint is ALL state_bytes (O(batch),
+independent of max_len -- cache_bytes == 0), whisper carries a per-slot
+cross cache on top of its decoder KV, and jamba splits between the two
+(and also runs paged, where only its attention layers page).  Results are
+merge-written as the ``serve_multiarch`` section of ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import transformer as T
+from repro.serve.scheduler import ContinuousScheduler
+
+try:  # run.py imports this as benchmarks.serve_multiarch; scripts run bare
+    from benchmarks.serve_continuous import make_trace
+    from benchmarks.serve_paged import write_section
+except ImportError:
+    from serve_continuous import make_trace
+    from serve_paged import write_section
+
+# (label, arch_id, cache_mode) -- one per architecture family the
+# scheduler serves; jamba appears twice to cover hybrid paging.
+ARCHS = [
+    ("dense", "deepseek-7b", "contiguous"),
+    ("dense_paged", "deepseek-7b", "paged"),
+    ("rwkv6", "rwkv6-1.6b", "contiguous"),
+    ("jamba", "jamba-1.5-large-398b", "contiguous"),
+    ("jamba_paged", "jamba-1.5-large-398b", "paged"),
+    ("whisper", "whisper-small", "contiguous"),
+]
+
+
+def run_arch(label, arch, cache_mode, args):
+    cfg = smoke_variant(get_config(arch))
+    pol = make_policy("f32")
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    kw = dict(batch=args.batch, max_len=args.max_len,
+              prefill_len=args.prefill_len)
+    if cache_mode != "contiguous":
+        kw.update(cache_mode=cache_mode, page_size=args.page_size)
+    sched = ContinuousScheduler(params, cfg, pol, **kw)
+    trace = make_trace(args.requests, args.rate, cfg.vocab_size,
+                       args.min_new, args.max_new, args.seed)
+    rng = np.random.default_rng(args.seed + 1)
+    for r in trace:
+        if cfg.is_encoder_decoder:
+            r.enc_frames = (0.1 * rng.standard_normal(
+                (cfg.enc_seq, cfg.d_model))).astype(np.float32)
+        sched.submit(r)
+    done = sched.run()
+    st = sched.stats
+    lat = np.array([r.latency_s for r in done])
+    caps = cfg.decode_caps
+    return {
+        "arch": cfg.arch_id,
+        "cache_mode": cache_mode,
+        "caps": {"pageable": caps.pageable,
+                 "prefix_shareable": caps.prefix_shareable,
+                 "needs_exact_prefill": caps.needs_exact_prefill,
+                 "constant_state": caps.constant_state,
+                 "cross_cache": caps.cross_cache},
+        "done": len(done),
+        "useful_tokens": st.useful_tokens,
+        "tokens_per_s": round(st.tokens_per_s, 1),
+        "decode_tokens_per_s": round(st.decode_tokens_per_s, 1),
+        "slot_utilisation": round(st.slot_utilisation, 3),
+        "cache_bytes": st.cache_bytes,
+        "state_bytes": st.state_bytes,
+        "p50_latency_s": round(float(np.percentile(lat, 50)), 3),
+    }
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0)
+    ap.add_argument("--min-new", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(list(argv))
+
+    results = {}
+    for label, arch, cache_mode in ARCHS:
+        results[label] = run_arch(label, arch, cache_mode, args)
+        r = results[label]
+        print(f"{label:12s} {r['arch']:22s} {cache_mode:10s} "
+              f"done={r['done']:3d} tok/s={r['tokens_per_s']:8.1f} "
+              f"util={r['slot_utilisation']:.3f} "
+              f"cache={r['cache_bytes']:8d}B state={r['state_bytes']:8d}B")
+
+    payload = {
+        "bench": "serve_multiarch",
+        "config": {k: getattr(args, k) for k in
+                   ("batch", "requests", "rate", "min_new", "max_new",
+                    "max_len", "prefill_len", "page_size", "seed")},
+        "archs": results,
+    }
+    write_section(args.out, "serve_multiarch", payload)
+    print(f"wrote {args.out} [serve_multiarch]")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -47,6 +47,12 @@ def run_scheduler(args, cfg, pol, params):
             cache_mode=args.cache_mode, page_size=args.page_size,
             num_pages=args.num_pages, prefix_cache=args.prefix_cache)
     else:
+        caps = cfg.decode_caps
+        if caps.needs_exact_prefill or caps.cross_cache:
+            raise SystemExit(
+                "cohort mode left-pads prompts (corrupts recurrent scans) "
+                "and has no per-request encoder-frame plumbing -- serve "
+                f"{cfg.arch_id} with --mode continuous")
         sched = CohortScheduler(params, cfg, pol, batch=args.batch,
                                 max_len=max_len)
     rng = np.random.default_rng(0)
@@ -61,8 +67,13 @@ def run_scheduler(args, cfg, pol, params):
         if args.prefix_cache:
             head = groups[i % len(groups)]
             prompt = np.concatenate([head, prompt])[: args.prompt_len]
+        frames = None
+        if cfg.is_encoder_decoder:
+            # per-request synthetic audio frames -> the slot's cross cache
+            frames = (0.1 * rng.standard_normal(
+                (cfg.enc_seq, cfg.d_model))).astype(np.float32)
         sched.submit(Request(
-            rid=i, prompt=prompt,
+            rid=i, prompt=prompt, enc_frames=frames,
             max_new_tokens=int(rng.integers(2, args.new_tokens + 1))))
     done = sched.run()
     st = sched.stats
@@ -71,6 +82,10 @@ def run_scheduler(args, cfg, pol, params):
     logger.info("slot utilisation %.3f, %.1f tok/s, p50 latency %.3fs",
                 st.slot_utilisation, st.tokens_per_s,
                 float(np.median([r.latency_s for r in done])))
+    if args.mode == "continuous":
+        logger.info("decode-state footprint: %d KV cache bytes + %d "
+                    "per-slot state bytes (recurrent/cross)",
+                    st.cache_bytes, st.state_bytes)
     if getattr(sched, "allocator", None) is not None:
         logger.info("paged cache (%s): %d-page pool, %d preemptions, "
                     "%d pages leaked, %d cache bytes", args.cache_mode,

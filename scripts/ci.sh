@@ -7,6 +7,7 @@
 #   bash scripts/ci.sh paged      # paged KV-cache smoke (tiny pool)
 #   bash scripts/ci.sh prefix     # prefix-cache smoke (reclaim-before-preempt)
 #   bash scripts/ci.sh faults     # chaos smoke: crash -> resume bit-identical
+#   bash scripts/ci.sh multiarch  # one scheduler, every arch family smoke
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
 # in the decode path surface without accelerators.  The paged smoke runs the
@@ -18,6 +19,9 @@
 # resumes from the surviving checkpoint, and asserts the resumed loss
 # trajectory is bit-identical to an uninterrupted reference run; it also
 # tears the newest checkpoint on disk and asserts restore falls back.
+# The multiarch smoke drives the continuous scheduler through one config
+# per architecture family (dense, recurrent, hybrid, encoder-decoder) so
+# the slot-state contract's admit/prefill/evict paths run on every PR.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -87,6 +91,21 @@ assert sched.allocator.reclaimed > 0, "cache never yielded pages"
 assert st.preemptions == 0, "preempted a live slot before draining the cache"
 assert sched.allocator.in_use == 0, "pages leaked after drain"
 EOF
+fi
+
+if [[ "$step" == "all" || "$step" == "multiarch" ]]; then
+    echo "=== multiarch serving smoke: one scheduler, every arch family ==="
+    # dense (attention KV), recurrent (O(1) state, cache_bytes==0), hybrid
+    # (mamba state + attention KV), encoder-decoder (per-slot cross cache)
+    for arch in deepseek-7b rwkv6-1.6b jamba-1.5-large-398b whisper-small; do
+        python examples/serve.py --mode continuous --arch "$arch" \
+            --batch 2 --prompt-len 8 --new-tokens 4 --requests 4
+    done
+    # hybrid paging: only jamba's attention layers page; its mamba state
+    # rides the per-slot scatter/reset path alongside the block tables
+    python examples/serve.py --mode continuous --arch jamba-1.5-large-398b \
+        --cache-mode paged --batch 2 --prompt-len 8 --new-tokens 4 \
+        --requests 4 --page-size 8
 fi
 
 if [[ "$step" == "all" || "$step" == "faults" ]]; then

@@ -16,6 +16,37 @@ MLPS = ("dense", "moe", "rwkv_cm")
 
 
 @dataclasses.dataclass(frozen=True)
+class DecodeCaps:
+    """Serving capabilities derived from the architecture (see
+    ``serve/slot_state.py`` for the per-family matrix).
+
+    - ``pageable``: every self-attention layer is a plain full-attention
+      layer, so its KV can live in the global page pool (sliding-window
+      rings and attention-free archs cannot page).
+    - ``prefix_shareable``: a prompt's cache content is a pure function of
+      its token ids, so page chains may be shared across slots by token
+      hash.  False whenever non-token inputs feed the cache (encoder
+      frames, vision embeds) or any layer carries non-paged state that a
+      shared-prefix admission would not reproduce (recurrent scans).
+    - ``needs_exact_prefill``: some layer carries a recurrence whose state
+      must not be advanced by right-padding -- prefill must length-mask
+      the scan (mamba/rwkv time-mix and the rwkv channel-mix shift).
+    - ``constant_state``: no self-attention at all; decode state is O(1)
+      per slot and no KV pool/ring exists (the cheapest slots).
+    - ``windowed``: some layer keeps a bounded sliding-window ring, which
+      caps the prefill bucket at the window width in contiguous mode.
+    - ``cross_cache``: encoder-decoder; slots carry a per-slot encoder
+      output / cross-attention KV cache filled once at admission.
+    """
+    pageable: bool
+    prefix_shareable: bool
+    needs_exact_prefill: bool
+    constant_state: bool
+    windowed: bool
+    cross_cache: bool
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelConfig:
     arch_id: str
     family: str                      # dense | moe | ssm | hybrid | audio | vlm | encoder
@@ -133,6 +164,29 @@ class ModelConfig:
         if "attn_local" in mixers and self.sliding_window:
             return True  # gemma2-style: half the layers have bounded cache
         return False
+
+    @property
+    def decode_caps(self) -> DecodeCaps:
+        """Serving capability flags (decode-state contract, serve/slot_state).
+
+        Derived, never declared: a new architecture gets correct serving
+        behaviour from its ``block_pattern`` alone.
+        """
+        mixers = {m for m, _ in self.block_pattern}
+        mlps = {mlp for _, mlp in self.block_pattern}
+        attn = {m for m in mixers if m.startswith("attn")}
+        recurrent = bool(mixers & {"mamba", "rwkv"}) or "rwkv_cm" in mlps
+        pageable = bool(attn) and attn == {"attn"}
+        return DecodeCaps(
+            pageable=pageable,
+            prefix_shareable=(pageable and not recurrent
+                              and not self.is_encoder_decoder
+                              and self.n_vision_tokens == 0),
+            needs_exact_prefill=recurrent,
+            constant_state=not attn,
+            windowed="attn_local" in mixers,
+            cross_cache=self.is_encoder_decoder,
+        )
 
     def layer_kinds(self) -> Tuple[Tuple[str, str], ...]:
         """Full per-layer (mixer, mlp) list of length n_layers."""

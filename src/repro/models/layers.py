@@ -674,6 +674,21 @@ def _paged_token_write_quant(pages, scales, page_ids, slot_in_page, token):
     return pages.at[page_ids].set(page), scales.at[page_ids].set(new)
 
 
+def valid_token_mask(valid_len, batch: int, s: int):
+    """(B, S) bool mask of true-prompt positions for right-padded prefill.
+
+    ``valid_len``: scalar or (B,) int32 true lengths; None returns None (no
+    masking -- full-width prompts).  Shared by the attention pad-KV zeroing
+    and the recurrent mixers' length-masked scans (mamba / rwkv), so every
+    mixer family agrees on which positions of a padded bucket are real.
+    """
+    if valid_len is None:
+        return None
+    vl = jnp.broadcast_to(
+        jnp.asarray(valid_len).astype(jnp.int32).reshape(-1), (batch,))
+    return jnp.arange(s, dtype=jnp.int32)[None, :] < vl[:, None]
+
+
 def paged_prefill_write(pcache: dict, k: jax.Array, v: jax.Array,
                         valid_len=None) -> dict:
     """Write whole-batch contiguous prefill KV (B, S, KV, Dh) into the page

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.amp import Policy
 from repro.sharding import EMBED, INNER
-from repro.models.layers import trunc_normal
+from repro.models.layers import trunc_normal, valid_token_mask
 
 Params = Any
 
@@ -63,10 +63,18 @@ def init_mamba(key, cfg: ModelConfig) -> Tuple[Params, Any]:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: Optional[jax.Array] = None):
+                 state: Optional[jax.Array] = None, valid_len=None):
     """Depthwise causal conv along time.  x: (B,S,din); w: (dc,din).
 
     Returns (y, new_state) where state caches the last dc-1 inputs.
+
+    ``valid_len`` (scalar or (B,) int32): true lengths of right-padded rows.
+    The cached window then ends at each row's true length -- pad-token inputs
+    never enter the carried conv state.  Position t of ``x`` sits at index
+    ``t + dc - 1`` of ``x_pad`` (dc-1 context rows are prepended), so the
+    window over positions [len-dc+1, len) is indices [len, len+dc-2]; for a
+    row shorter than dc-1 the gather reaches back into the prepended context
+    (previous state / zeros), exactly what an unpadded run would carry.
     """
     dc = w.shape[0]
     if state is None:
@@ -75,7 +83,16 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
         x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
     s = x.shape[1]
     y = sum(x_pad[:, k:k + s, :] * w[k][None, None] for k in range(dc))
-    new_state = x_pad[:, -(dc - 1):, :] if dc > 1 else None
+    if dc <= 1:
+        new_state = None
+    elif valid_len is None:
+        new_state = x_pad[:, -(dc - 1):, :]
+    else:
+        vl = jnp.broadcast_to(
+            jnp.asarray(valid_len).astype(jnp.int32).reshape(-1),
+            (x.shape[0],))
+        idx = vl[:, None] + jnp.arange(dc - 1, dtype=jnp.int32)[None, :]
+        new_state = jnp.take_along_axis(x_pad, idx[..., None], axis=1)
     return y + b[None, None], new_state
 
 
@@ -132,8 +149,16 @@ def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
 def apply_mamba(params: Params, x: jax.Array, cfg: ModelConfig,
                 policy: Policy, *, state: Optional[dict] = None,
                 return_state: bool = False, chunk: int = 128,
-                use_chunked: bool = True):
-    """x: (B, S, d).  Returns (y, new_state_or_None)."""
+                use_chunked: bool = True, valid_len=None):
+    """x: (B, S, d).  Returns (y, new_state_or_None).
+
+    ``valid_len`` (scalar or (B,) int32): right-padded prefill support.
+    Positions >= the row's true length step the recurrence with the fp32
+    identity element (a=1.0, bx=0.0), and the scan runs *sequentially* so
+    the result does not depend on the padded width -- the carried ssm/conv
+    state is bit-identical to an unpadded sequential scan of the true
+    prompt (identity steps h = 1*h + 0 are exact no-ops).
+    """
     b, s, d = x.shape
     din, n, r = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.dt_rank
     cd = policy.compute_dtype
@@ -144,7 +169,7 @@ def apply_mamba(params: Params, x: jax.Array, cfg: ModelConfig,
     conv_state = state["conv"] if state is not None else None
     x1, new_conv = _causal_conv(
         x1, params["conv_w"].astype(cd), params["conv_b"].astype(cd),
-        conv_state)
+        conv_state, valid_len=valid_len if s > 1 else None)
     x1 = jax.nn.silu(x1)
 
     dbc = x1 @ params["x_proj"].astype(cd)
@@ -156,6 +181,10 @@ def apply_mamba(params: Params, x: jax.Array, cfg: ModelConfig,
     a_coef = jnp.exp(dt[..., None] * a[None, None])         # (B,S,din,N)
     bx = (dt * x1.astype(jnp.float32))[..., None] * \
         b_in.astype(jnp.float32)[:, :, None, :]             # (B,S,din,N)
+    if valid_len is not None and s > 1:
+        keep = valid_token_mask(valid_len, b, s)            # (B,S)
+        a_coef = jnp.where(keep[..., None, None], a_coef, 1.0)
+        bx = jnp.where(keep[..., None, None], bx, 0.0)
 
     h0 = state["ssm"] if state is not None else jnp.zeros((b, din, n))
     if s == 1:
@@ -163,6 +192,14 @@ def apply_mamba(params: Params, x: jax.Array, cfg: ModelConfig,
         h = a_coef[:, 0] * h0 + bx[:, 0]
         ys = h[:, None]
         h_final = h
+    elif valid_len is not None:
+        # masked prefill runs the *sequential* scan: the chunked
+        # associative-scan combine tree depends on the padded length, so two
+        # different bucket widths would associate the same real prefix
+        # differently (fp mul is not associative).  Sequentially, identity
+        # steps are exact no-ops and the state is bit-identical for any
+        # padding -- the serve-slot exactness contract.
+        ys, h_final = _ssm_sequential(a_coef, bx, h0)
     elif use_chunked:
         ys, h_final = _ssm_chunked(a_coef, bx, h0, chunk)
     else:

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.core.amp import Policy
 from repro.sharding import EMBED, FF, HEADS
-from repro.models.layers import trunc_normal
+from repro.models.layers import trunc_normal, valid_token_mask
 
 Params = Any
 LORA = 32   # low-rank size of the data-dependent mix/decay projections
@@ -93,12 +93,27 @@ def init_channel_mix(key, cfg: ModelConfig) -> Tuple[Params, Any]:
     return params, specs
 
 
-def _token_shift(x: jax.Array, last: Optional[jax.Array]):
-    """Returns (x_{t-1}, new_last).  last: (B, 1, d) from previous step."""
+def _token_shift(x: jax.Array, last: Optional[jax.Array], valid_len=None):
+    """Returns (x_{t-1}, new_last).  last: (B, 1, d) from previous step.
+
+    ``valid_len`` (scalar or (B,) int32): with right-padded rows the carried
+    shift must be the *last real* token, not the padded tail.  Position t of
+    ``x`` sits at index t+1 of ``ext = [last, x]``, so the token at the true
+    length-1 is ``ext[valid_len]`` (valid_len == 0 returns ``last`` itself,
+    matching a zero-token scan).
+    """
     if last is None:
         last = jnp.zeros_like(x[:, :1])
-    shifted = jnp.concatenate([last.astype(x.dtype), x[:, :-1]], axis=1)
-    return shifted, x[:, -1:]
+    ext = jnp.concatenate([last.astype(x.dtype), x], axis=1)
+    shifted = ext[:, :-1]
+    if valid_len is None:
+        new_last = x[:, -1:]
+    else:
+        vl = jnp.broadcast_to(
+            jnp.asarray(valid_len).astype(jnp.int32).reshape(-1),
+            (x.shape[0],))
+        new_last = jnp.take_along_axis(ext, vl[:, None, None], axis=1)
+    return shifted, new_last
 
 
 def wkv6_chunked(r, k, v, logw, u, s0, chunk: int = 64):
@@ -177,14 +192,22 @@ def init_rwkv_state(cfg: ModelConfig, batch: int) -> dict:
 
 def apply_time_mix(params: Params, x: jax.Array, cfg: ModelConfig,
                    policy: Policy, *, state: Optional[dict] = None,
-                   return_state: bool = False, chunk: int = 64):
+                   return_state: bool = False, chunk: int = 64,
+                   valid_len=None):
+    """``valid_len`` (scalar or (B,) int32): right-padded prefill support.
+    Pad positions contribute the WKV identity step (logw=0 -> w=1 decay,
+    k=0 -> no additive update) and the carried token-shift is gathered at
+    the true last token, so the state after a padded scan is bit-identical
+    to an unpadded scan (fp32 identity ops absorb exactly)."""
     b, s, d = x.shape
     h, hs = cfg.rwkv_n_heads, cfg.rwkv_head_size
     cd = policy.compute_dtype
     xc = x.astype(cd)
+    if s == 1:
+        valid_len = None
 
     prev = state["tm_shift"] if state is not None else None
-    shifted, new_shift = _token_shift(xc, prev)
+    shifted, new_shift = _token_shift(xc, prev, valid_len=valid_len)
     xx = shifted - xc
     # ddlerp: data-dependent interpolation weights via LoRA
     xxx = xc + xx * params["maa_x"].astype(cd)
@@ -205,8 +228,20 @@ def apply_time_mix(params: Params, x: jax.Array, cfg: ModelConfig,
     logw = -jnp.exp(params["decay"].astype(jnp.float32)[None, None] + dd)
     logw = logw.reshape(b, s, h, hs)
 
+    if valid_len is not None:
+        # pad positions step the recurrence with the identity: w=1 (no
+        # decay), k=0 (no update).  r/v need no mask -- pad outputs are
+        # discarded by the caller and the state never sees them.
+        keep = valid_token_mask(valid_len, b, s)[..., None, None]  # (B,S,1,1)
+        k = jnp.where(keep, k, jnp.zeros((), k.dtype))
+        logw = jnp.where(keep, logw, 0.0)
+
     s0 = state["wkv"] if state is not None else jnp.zeros((b, h, hs, hs))
-    if s == 1:
+    if s == 1 or valid_len is not None:
+        # decode, or masked prefill: the chunk-parallel combine tree depends
+        # on the padded length, so masked prefill runs sequentially -- pad
+        # steps are exact identities (w=1, kv=0) and the carried state is
+        # bit-identical for any bucket width (serve-slot exactness contract).
         o, s_final = wkv6_sequential(r, k, v, logw, params["u"], s0)
     else:
         # dispatch to the Pallas wkv6 kernel on TPU (same backend selector
@@ -238,11 +273,13 @@ def apply_time_mix(params: Params, x: jax.Array, cfg: ModelConfig,
 
 def apply_channel_mix(params: Params, x: jax.Array, cfg: ModelConfig,
                       policy: Policy, *, state: Optional[dict] = None,
-                      return_state: bool = False):
+                      return_state: bool = False, valid_len=None):
     cd = policy.compute_dtype
     xc = x.astype(cd)
+    if x.shape[1] == 1:
+        valid_len = None
     prev = state["cm_shift"] if state is not None else None
-    shifted, new_shift = _token_shift(xc, prev)
+    shifted, new_shift = _token_shift(xc, prev, valid_len=valid_len)
     xx = shifted - xc
     xk = xc + xx * params["maa_k"].astype(cd)
     xr = xc + xx * params["maa_r"].astype(cd)

@@ -168,14 +168,15 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
         mst = ({"conv": state["conv"], "ssm": state["ssm"]}
                if state is not None and "conv" in state else None)
         y, ns = MB.apply_mamba(p["mixer"], h, cfg, policy, state=mst,
-                               return_state=return_state)
+                               return_state=return_state, valid_len=valid_len)
         if return_state:
             new_state.update(ns)
     elif mixer == "rwkv":
         rst = ({"tm_shift": state["tm_shift"], "wkv": state["wkv"]}
                if state is not None and "wkv" in state else None)
         y, ns = RW.apply_time_mix(p["mixer"], h, cfg, policy, state=rst,
-                                  return_state=return_state)
+                                  return_state=return_state,
+                                  valid_len=valid_len)
         if return_state:
             new_state.update(ns)
     else:
@@ -204,7 +205,8 @@ def _apply_layer(p, x, cfg: ModelConfig, policy: Policy, mixer: str,
         cst = ({"cm_shift": state["cm_shift"]}
                if state is not None and "cm_shift" in state else None)
         y, ns = RW.apply_channel_mix(p["mlp"], h, cfg, policy, state=cst,
-                                     return_state=return_state)
+                                     return_state=return_state,
+                                     valid_len=valid_len)
         if return_state and ns is not None:
             new_state.update(ns)
     x = x + maybe_postnorm(y, "postnorm2").astype(x.dtype)

@@ -36,6 +36,15 @@ block table and prefills only the uncached suffix (a whole-prompt hit skips
 the prefill jit entirely), decode writes into a shared page copy-on-write
 first, and zero-ref cached pages are LRU-reclaimed under pool pressure
 before any slot is preempted (benchmarks/serve_prefix.py measures the win).
+
+``ContinuousScheduler`` is architecture-agnostic: every slot operation goes
+through ``serve/slot_state.SlotStateAdapter`` (the per-slot decode-state
+contract) and admission gates each *feature* on a derived capability
+(``cfg.decode_caps``) -- paged modes need ``pageable``, prefix caching
+needs ``prefix_shareable``, encoder-decoder requests carry ``enc_frames``.
+Recurrent archs (rwkv6, jamba's mamba layers) serve through the same
+right-padded prefill bucket via length-masked scans, bit-identical to an
+unpadded prefill (see slot_state.py for the contract and matrix).
 """
 from __future__ import annotations
 
@@ -51,7 +60,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.amp import Policy
 from repro.models import transformer as T
-from repro.serve.serve_step import prefill_into_slot
+from repro.serve.slot_state import SlotStateAdapter
 
 
 @dataclasses.dataclass
@@ -63,6 +72,10 @@ class Request:
     deadline_s: Optional[float] = None  # wall-clock budget from arrival;
     #                              past it the slot is evicted (partial
     #                              output kept) and stats.timeouts counts it
+    enc_frames: Optional[np.ndarray] = None  # (enc_seq, d_model) encoder
+    #                              input (whisper); required when the arch
+    #                              is encoder-decoder, filled into the
+    #                              slot's cross-attn cache at admission
     output: Optional[np.ndarray] = None
     first_token_s: float = 0.0   # arrival -> first generated token
     latency_s: float = 0.0       # arrival -> completion
@@ -89,6 +102,11 @@ class ServeStats:
     prefill_tokens_saved: int = 0  # prompt tokens served from cached pages
     pages_shared: int = 0        # cached pages mapped into admitted slots
     cow_copies: int = 0          # copy-on-write page duplications
+    # decode-state footprint (slot_state.SlotStateAdapter accounting)
+    cache_bytes: int = 0         # self-attention KV: pages/tables or stripes
+    state_bytes: int = 0         # per-slot O(1) state: recurrent scan
+    #                              carries + cross-attn caches (rwkv6 has
+    #                              cache_bytes == 0 and only this)
 
     @property
     def slot_utilisation(self) -> float:
@@ -458,20 +476,28 @@ class ContinuousScheduler(_SchedulerBase):
         super().__init__(params, cfg, policy, batch=batch, max_len=max_len,
                          eos_id=eos_id, pad_id=pad_id, moe_impl=moe_impl)
         assert prefill_len <= max_len
-        if not all(m.startswith("attn") for m, _ in cfg.block_pattern):
-            raise ValueError(
-                "continuous batching requires attention-only archs: the "
-                "right-padded slot prefill would run pad tokens through a "
-                "recurrent (mamba/rwkv) state")
+        # admission policy is driven by derived capabilities, not by
+        # pattern-matching block_pattern: any architecture serves, and each
+        # *feature* gates on the capability it actually needs
+        caps = cfg.decode_caps
         if cache_mode not in ("contiguous", "paged", "paged_int8"):
             raise ValueError(f"unknown cache_mode {cache_mode!r}")
-        if cache_mode != "contiguous" and not all(
-                m == "attn" for m, _ in cfg.block_pattern):
-            raise ValueError("paged KV cache requires full-attention layers "
-                             "(sliding-window rings cannot be paged)")
+        if cache_mode != "contiguous" and not caps.pageable:
+            raise ValueError(
+                "paged KV cache requires a pageable arch (every "
+                "self-attention layer full-attention): sliding-window rings "
+                "and attention-free state cannot be paged -- serve "
+                f"{cfg.arch_id} with cache_mode='contiguous'")
         if prefix_cache and cache_mode == "contiguous":
             raise ValueError("prefix_cache requires a paged cache_mode "
                              "(sharing works at page granularity)")
+        if prefix_cache and not caps.prefix_shareable:
+            raise ValueError(
+                "prefix_cache requires prefix_shareable: the cache must be "
+                "a pure function of prompt token ids (recurrent state, "
+                "encoder frames and vision embeds all break the token-hash "
+                f"index) -- not satisfied by {cfg.arch_id}")
+        self.caps = caps
         self.prefill_len = prefill_len
         self.cache_mode = cache_mode
         self.cache_dtype = cache_dtype
@@ -498,21 +524,24 @@ class ContinuousScheduler(_SchedulerBase):
         # legitimately diverge from an uninterrupted run: the re-prefill
         # buckets prompt+generated, truncating beyond prefill_len)
         self.preempted_rids: set = set()
-        self._prefill = jax.jit(
-            lambda p, t, l, s, i: prefill_into_slot(
-                p, t, l, s, i, cfg, policy, moe_impl=moe_impl))
-        # suffix prefill (resume at a cached page-aligned prefix) and the
-        # copy-on-write page duplication, both jit-stable: start / length /
-        # slot / page ids are traced scalars
-        self._prefill_sfx = jax.jit(
-            lambda p, t, st, l, s, i: prefill_into_slot(
-                p, t, l, s, i, cfg, policy, moe_impl=moe_impl, start=st))
-        self._copy_page = jax.jit(
-            lambda s, src, dst, valid: T.copy_page(s, src, dst, valid))
+        # everything architecture-specific about a slot (prefill closures,
+        # reset, page plumbing, footprint) lives behind the adapter; this
+        # scheduler is pure policy over abstract slots
+        self.adapter = SlotStateAdapter(
+            params, cfg, policy, batch=batch, max_len=max_len,
+            cache_dtype=cache_dtype, paged_cfg=self.paged_cfg,
+            moe_impl=moe_impl)
+        self.stats.cache_bytes = self.adapter.cache_bytes()
+        self.stats.state_bytes = self.adapter.state_bytes()
 
     def submit(self, req: Request):
+        if self.caps.cross_cache and req.enc_frames is None:
+            raise ValueError(
+                f"request {req.rid}: {self.cfg.arch_id} is encoder-decoder; "
+                "submit() needs enc_frames (enc_seq, d_model) to fill the "
+                "slot's cross-attention cache at admission")
         need = min(len(req.prompt), self.prefill_len) + req.max_new_tokens
-        if need > self.max_len:
+        if need > self.max_len and not self.caps.constant_state:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new_tokens needs {need} "
                 f"cache slots > max_len {self.max_len} (the ring would "
@@ -534,9 +563,7 @@ class ContinuousScheduler(_SchedulerBase):
     def _write_table_row(self, state, slot: int, pages: List[int]):
         """Mirror a slot's host-side page list into the device block tables
         (unallocated tail entries point at the trash page)."""
-        row = np.zeros((self.max_pages,), np.int32)
-        row[:len(pages)] = pages
-        return T.set_block_tables(state, row, slot=slot)
+        return self.adapter.write_table_row(state, slot, pages)
 
     def _bucket(self, prompt: np.ndarray):
         """Right-pad (or left-truncate) a prompt to the prefill bucket."""
@@ -551,10 +578,7 @@ class ContinuousScheduler(_SchedulerBase):
         t0 = time.perf_counter()
         pending = sorted(self.queue, key=lambda r: r.arrival_s)
         self.queue = []
-        state = T.init_decode_state(
-            self.cfg, self.batch, self.max_len, self.cache_dtype,
-            enc_len=self.cfg.enc_seq if self.cfg.is_encoder_decoder else 0,
-            paged=self.paged_cfg)
+        state = self.adapter.init_state()
         slots: List[Optional[Request]] = [None] * self.batch
         gens: List[List[int]] = [[] for _ in range(self.batch)]
         # output tokens generated before a preemption, keyed by slot / rid
@@ -582,6 +606,11 @@ class ContinuousScheduler(_SchedulerBase):
                 # point the empty slot's table back at the trash page so its
                 # dead decode writes cannot land in recycled pages
                 state = self._write_table_row(state, i, [])
+            if self.adapter.has_slot_state:
+                # zero the slot's recurrent/cross state rows: stale state
+                # cannot leak to the next tenant (the decode-state contract's
+                # reset_slot; see serve/slot_state.py)
+                state = self.adapter.reset_slot(state, i)
 
         def finish(i: int, now: float):
             req = slots[i]
@@ -711,13 +740,16 @@ class ContinuousScheduler(_SchedulerBase):
                             stoks = np.full((1, self.prefill_len),
                                             self.pad_id, np.int32)
                             stoks[0, : len(sfx)] = sfx
-                            logits, state = self._prefill_sfx(
-                                self.params, jnp.asarray(stoks), covered,
-                                length - covered, state, i)
+                            logits, state = self.adapter.prefill(
+                                state, jnp.asarray(stoks),
+                                length - covered, i, start=covered)
                             self.stats.prefill_tokens += length - covered
                         else:
-                            logits, state = self._prefill(
-                                self.params, toks, length, state, i)
+                            frames = (jnp.asarray(req.enc_frames,
+                                                  jnp.float32)[None]
+                                      if self.caps.cross_cache else None)
+                            logits, state = self.adapter.prefill(
+                                state, toks, length, i, enc_frames=frames)
                             self.stats.prefill_tokens += length
                         tok0 = int(np.argmax(np.asarray(logits)))
                         self.stats.prefills += 1
@@ -782,7 +814,7 @@ class ContinuousScheduler(_SchedulerBase):
                             continue
                         pi = kv_next[i] // self.page_size
                         old = slot_pages[i][pi]
-                        state = self._copy_page(
+                        state = self.adapter.copy_page(
                             state, old, pg[0],
                             kv_next[i] % self.page_size)
                         slot_pages[i][pi] = pg[0]

@@ -236,10 +236,13 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
 
     Constraints: P must not exceed the smallest attention-cache length (a
     sliding-window layer's ring keeps only its last ``window`` positions of
-    a wider prefill, which would drop real tokens of short prompts), and the
-    arch must be attention-only -- ``lengths`` masking covers KV slots, but
-    pad tokens past ``length`` would still advance a recurrent (mamba/rwkv)
-    scan and corrupt the slot's state.
+    a wider prefill, which would drop real tokens of short prompts).  Any
+    mixer family works: attention layers mask pad KV via ``lengths`` /
+    ``kv_len``, recurrent layers (mamba/rwkv) length-mask their scans so
+    pad tokens step the state with the exact identity (bit-identical to an
+    unpadded prefill -- the serve/slot_state exactness contract), and
+    encoder-decoder archs pass ``enc_frames`` through ``**kw`` to fill the
+    slot's cross-attention cache at admission.
 
     ``start`` (traced scalar, page-aligned, paged states only): prefix-cache
     suffix mode.  The slot's block table already maps ``start`` cached
@@ -255,15 +258,17 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
     """
     b1, p = tokens.shape
     assert b1 == 1, "prefill_into_slot takes a single request"
-    assert all(mixer.startswith("attn") for mixer, _ in cfg.block_pattern), \
-        "right-padded slot prefill requires attention-only archs (recurrent" \
-        " state would absorb the pad tokens)"
     max_len, cache_dtype, enc_len, paged = _cache_geometry(state)
-    # a bucket wider than the cache extent would make kv_len = pos + s
-    # overrun the cache (the decode path clamps, silently dropping prompt
-    # tokens) -- reject the geometry outright
-    assert p <= max_len, \
-        f"prefill bucket {p} exceeds the cache extent {max_len}"
+    if any(m.startswith("attn") for m, _ in cfg.block_pattern):
+        # a bucket wider than the cache extent would make kv_len = pos + s
+        # overrun the cache (the decode path clamps, silently dropping
+        # prompt tokens) -- reject the geometry outright
+        assert p <= max_len, \
+            f"prefill bucket {p} exceeds the cache extent {max_len}"
+    else:
+        # attention-free (constant_state): no KV extent exists; the scratch
+        # row only needs to span the bucket itself
+        max_len = p
     for st in state["blocks"]:
         if "cache" in st and "k" in st["cache"]:
             assert p <= st["cache"]["k"].shape[2], \
@@ -315,16 +320,19 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
                                         row["blocks"])
     else:
         # the scratch row's contiguous cache is scattered into the pages the
-        # slot's block table names; every other leaf (cross caches) scatters
-        # along the batch axis as usual
+        # slot's block table names; every other leaf (cross caches, hybrid
+        # layers' recurrent state) scatters along the batch axis as usual.
+        # A hybrid's recurrent blocks have no "cache" at all -- batch-axis
+        # scatter covers their whole state.
         blocks = []
         for live_st, row_st in zip(state["blocks"], row["blocks"]):
             d = {k: jax.tree_util.tree_map(scatter_row, live_st[k],
                                            row_st[k])
                  for k in live_st if k != "cache"}
-            d["cache"] = _scatter_row_into_pages(live_st["cache"],
-                                                 row_st["cache"], slot,
-                                                 length, width=p)
+            if "cache" in live_st:
+                d["cache"] = _scatter_row_into_pages(live_st["cache"],
+                                                     row_st["cache"], slot,
+                                                     length, width=p)
             blocks.append(d)
         blocks = tuple(blocks)
     pos = jax.lax.dynamic_update_slice(
@@ -334,14 +342,23 @@ def prefill_into_slot(params, tokens, length, state, slot, cfg: ModelConfig,
 
 def greedy_generate(params, prompt, cfg: ModelConfig, policy: Policy, *,
                     max_new: int = 16, max_len: int = 256,
-                    moe_impl: str = "dense"):
-    """Simple single-host generation loop for the examples/ scripts."""
+                    moe_impl: str = "dense", **kw):
+    """Simple single-host generation loop for the examples/ scripts.
+
+    ``**kw`` forwards prefill inputs (``enc_frames`` for encoder-decoder,
+    ``vision_embeds`` for vlm).  Exact-prefill archs (recurrent scans) pass
+    explicit full-width ``lengths`` so the prefill takes the same masked
+    sequential-scan path as ``prefill_into_slot`` -- that is what makes
+    scheduler outputs bit-comparable against this reference.
+    """
     b, s = prompt.shape
     enc_len = cfg.enc_seq if cfg.is_encoder_decoder else 0
     state = T.init_decode_state(cfg, b, max_len, jnp.float32,
                                 enc_len=enc_len)
+    lengths = (jnp.full((b,), s, jnp.int32)
+               if cfg.decode_caps.needs_exact_prefill else None)
     logits, state = T.prefill(params, prompt, cfg, policy, state=state,
-                              moe_impl=moe_impl)
+                              lengths=lengths, moe_impl=moe_impl, **kw)
     tok = jnp.argmax(logits, -1)[:, None]
     out = [tok]
     step = jax.jit(partial(T.decode_step, cfg=cfg, policy=policy,

@@ -1,0 +1,214 @@
+"""Per-slot decode-state contract: one scheduler, every architecture.
+
+``ContinuousScheduler`` used to pattern-match ``block_pattern`` and reject
+anything that was not full-attention.  This module replaces that with a
+small adapter (``SlotStateAdapter``) that owns everything
+architecture-specific about a batch slot, so the scheduler is pure policy
+(admission / eviction / page accounting) over abstract slots.
+
+The contract
+------------
+A slot is one batch row of the stacked decode state
+(``transformer.init_decode_state``).  The adapter provides:
+
+* ``init_state()``            -- allocate the batch's decode state.
+* ``prefill(state, tokens, length, slot, *, start=None, enc_frames=None)``
+                              -- run ONE request's right-padded prompt
+                                 bucket and scatter its state into ``slot``
+                                 without disturbing neighbours (jit-stable:
+                                 ``length``/``slot``/``start`` are traced).
+* ``reset_slot(state, slot)`` -- zero the slot's non-paged state rows
+                                 (recurrent scans, cross caches, pos) at
+                                 release, so an evicted request's state can
+                                 never leak into the next occupant.
+* ``write_table_row(state, slot, pages)`` / ``copy_page(state, src, dst,
+  valid)``                    -- paged-pool plumbing (no-ops for archs
+                                 without paged layers).
+* ``state_bytes()`` / ``cache_bytes()`` -- footprint split: per-slot
+                                 O(1)/cross state vs self-attention KV.
+
+Capabilities (``configs.base.DecodeCaps``, derived from ``block_pattern``)
+tell the scheduler which policies apply: page accounting only when
+``pageable``, prefix caching only when ``prefix_shareable``, per-request
+encoder frames only when ``cross_cache``.
+
+Exactness rule (``needs_exact_prefill``): recurrent scans (mamba / rwkv
+time-mix / rwkv channel-mix shift) must not be advanced by the pad tokens
+of the static prefill bucket.  Prefill threads ``valid_len`` down to each
+mixer, which (a) steps pad positions with the exact fp identity (multiply
+by 1.0 / add 0.0 / decay w=1) and (b) runs the scan *sequentially*, whose
+result -- unlike the chunked associative scan's length-dependent combine
+tree -- does not depend on the bucket width.  Padded slot prefill is
+therefore bit-identical to an unpadded prefill of the true prompt, which
+is what lets one engine serve mixed-length recurrent traffic with the same
+"scheduler output == greedy_generate" guarantee the attention path has.
+
+Capability matrix (derived, not declared -- new configs get this free):
+
+family        example arch        pageable prefix  exact   const  window cross
+                                            share  prefill state
+dense/MoE     deepseek-7b, qwen3  yes      yes     --      --     --     --
+vlm           qwen2-vl-7b         yes      no[1]   --      --     --     --
+enc-dec       whisper-small       yes      no[1]   --      --     --     yes
+hybrid        jamba-1.5           yes      no[2]   yes     --     --     --
+recurrent     rwkv6-1.6b          no       no      yes     yes    --     --
+sliding-win   gemma2-27b          no[3]    no      --      --     yes    --
+
+[1] cache content depends on non-token inputs (vision embeds / audio
+    frames); a token-hash prefix index would alias different requests.
+[2] the mamba layers' state is not page-granular; a shared-prefix
+    admission could not reproduce it from the page chain.
+[3] ring buffers keep ``position % window``; pages assume append-only
+    growth.  Sliding-window archs serve in contiguous mode (per-slot
+    rings), with the prefill bucket capped at the window width.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.amp import Policy
+from repro.models import transformer as T
+from repro.serve.serve_step import prefill_into_slot
+
+
+def _tree_bytes(tree) -> int:
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class SlotStateAdapter:
+    """Architecture-specific slot operations behind one uniform surface.
+
+    Holds the jitted prefill / reset / copy closures (one compilation per
+    geometry, shared across every refill) and the state-shape knowledge the
+    scheduler must not care about.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, policy: Policy, *,
+                 batch: int, max_len: int, cache_dtype=jnp.bfloat16,
+                 paged_cfg=None, moe_impl: str = "dense"):
+        self.params, self.cfg, self.policy = params, cfg, policy
+        self.batch, self.max_len = batch, max_len
+        self.cache_dtype = cache_dtype
+        self.paged_cfg = paged_cfg
+        self.caps = cfg.decode_caps
+        self.enc_len = cfg.enc_seq if cfg.is_encoder_decoder else 0
+        self.max_pages = (-(-max_len // paged_cfg.page_size)
+                          if paged_cfg is not None else 0)
+
+        st = jax.eval_shape(lambda: self.init_state())
+        # any non-"cache" leaf is per-slot state the scheduler cannot see
+        # through the page tables: recurrent scans, cross caches -- those
+        # rows are zeroed at release (reset_slot)
+        self.has_slot_state = any(
+            k != "cache" for blk in st["blocks"] for k in blk)
+        self._state_bytes = sum(
+            _tree_bytes(sub) for blk in st["blocks"]
+            for k, sub in blk.items() if k != "cache")
+        self._cache_bytes = sum(
+            _tree_bytes(sub) for blk in st["blocks"]
+            for k, sub in blk.items() if k == "cache")
+
+        self._prefill = jax.jit(
+            lambda p, t, l, s, i: prefill_into_slot(
+                p, t, l, s, i, cfg, policy, moe_impl=moe_impl))
+        self._prefill_enc = jax.jit(
+            lambda p, t, l, s, i, f: prefill_into_slot(
+                p, t, l, s, i, cfg, policy, moe_impl=moe_impl,
+                enc_frames=f)) if self.caps.cross_cache else None
+        # suffix prefill (prefix-cache resume) and copy-on-write are only
+        # reachable for pageable archs; jit lazily via the same closures
+        self._prefill_sfx = jax.jit(
+            lambda p, t, st_, l, s, i: prefill_into_slot(
+                p, t, l, s, i, cfg, policy, moe_impl=moe_impl, start=st_))
+        self._copy = jax.jit(
+            lambda s, src, dst, valid: T.copy_page(s, src, dst, valid))
+        self._reset = jax.jit(self._reset_impl)
+
+    # --- allocation -------------------------------------------------------
+
+    def init_state(self):
+        return T.init_decode_state(self.cfg, self.batch, self.max_len,
+                                   self.cache_dtype, enc_len=self.enc_len,
+                                   paged=self.paged_cfg)
+
+    # --- prefill ----------------------------------------------------------
+
+    def prefill(self, state, tokens, length, slot, *, start=None,
+                enc_frames=None):
+        """Prefill one request into ``slot``.  Returns (logits (V,), state).
+
+        ``start`` resumes at a cached page-aligned prefix (pageable archs
+        only); ``enc_frames`` (1, enc_seq, d) is required for cross-cache
+        archs (the per-slot encoder output is computed here, at admission,
+        and decode reads the cached cross KV).
+        """
+        if self.caps.cross_cache:
+            assert enc_frames is not None, \
+                "encoder-decoder slots need per-request enc_frames"
+            assert start is None, "prefix resume is not prefix_shareable"
+            return self._prefill_enc(self.params, tokens, length, state,
+                                     slot, enc_frames)
+        if start is not None:
+            return self._prefill_sfx(self.params, tokens, start, length,
+                                     state, slot)
+        return self._prefill(self.params, tokens, length, state, slot)
+
+    # --- release ----------------------------------------------------------
+
+    def _reset_impl(self, state, slot):
+        zero = jnp.zeros((), jnp.float32)
+        blocks = []
+        for st in state["blocks"]:
+            d = {}
+            for k, sub in st.items():
+                if k == "cache":
+                    d[k] = sub  # paged/ring KV is reclaimed via tables
+                else:
+                    d[k] = jax.tree_util.tree_map(
+                        lambda leaf: leaf.at[:, slot].set(
+                            zero.astype(leaf.dtype)), sub)
+            blocks.append(d)
+        pos = state["pos"].at[slot].set(0)
+        return {"pos": pos, "blocks": tuple(blocks)}
+
+    def reset_slot(self, state, slot):
+        """Zero a released slot's state rows (recurrent / cross / pos).
+
+        Hygiene, not correctness: the next admission's prefill overwrites
+        every row it reads.  But a zeroed slot makes stale-state bugs loud
+        (an un-prefilled slot decodes from the zero state, not from the
+        previous tenant's), and ``state_bytes`` accounting stays honest.
+        """
+        return self._reset(state, jnp.asarray(slot, jnp.int32))
+
+    # --- paged plumbing ---------------------------------------------------
+
+    def write_table_row(self, state, slot: int, pages: List[int]):
+        """Mirror a slot's host-side page list into the device block tables
+        (unallocated tail entries point at the trash page 0)."""
+        row = np.zeros((self.max_pages,), np.int32)
+        row[: len(pages)] = pages
+        return T.set_block_tables(state, row, slot=slot)
+
+    def copy_page(self, state, src, dst, valid):
+        return self._copy(state, src, dst, valid)
+
+    # --- accounting -------------------------------------------------------
+
+    def state_bytes(self) -> int:
+        """Bytes of per-slot non-KV state: recurrent scan carries (conv/ssm,
+        token-shift/wkv) and cross-attention caches.  O(batch), independent
+        of max_len -- the quantity that makes recurrent slots the cheapest
+        (rwkv6 reports cache_bytes == 0)."""
+        return self._state_bytes
+
+    def cache_bytes(self) -> int:
+        """Bytes of self-attention KV cache (pages + tables + scales, or
+        the contiguous per-slot stripes/rings)."""
+        return self._cache_bytes

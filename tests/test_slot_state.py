@@ -1,0 +1,306 @@
+"""Arch-agnostic decode-state contract (serve/slot_state.py).
+
+Covers the PR 8 acceptance matrix: derived capabilities, bit-identical
+length-masked recurrent prefill (the padded bucket must not advance a
+mamba/rwkv scan), staggered recurrent slots, jamba hybrid evict/refill
+(attn pages + mamba state move together), whisper cross-cache isolation,
+and scheduler-vs-greedy bit-exactness for recurrent / hybrid / enc-dec
+archs through one ContinuousScheduler.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.amp import make_policy
+from repro.models import transformer as T
+from repro.serve.scheduler import ContinuousScheduler, Request
+from repro.serve.serve_step import greedy_generate, prefill_into_slot
+from repro.serve.slot_state import SlotStateAdapter
+
+POL = make_policy("f32")
+
+
+def _params(arch):
+    cfg = smoke_variant(get_config(arch))
+    params, _ = T.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _bucketed(pr, bucket):
+    t = np.zeros((1, bucket), np.int32)
+    t[0, : len(pr)] = pr
+    return jnp.asarray(t), len(pr)
+
+
+# ---------------------------------------------------------------------------
+# Capability derivation
+# ---------------------------------------------------------------------------
+
+def test_capability_matrix():
+    """The per-family matrix documented in slot_state.py, derived from
+    block_pattern alone."""
+    rows = {
+        # arch            page   share  exact  const  window cross
+        "deepseek-7b":   (True,  True,  False, False, False, False),
+        "qwen3-moe-30b-a3b": (True, True, False, False, False, False),
+        "qwen2-vl-7b":   (True,  False, False, False, False, False),
+        "whisper-small": (True,  False, False, False, False, True),
+        "jamba-1.5-large-398b": (True, False, True, False, False, False),
+        "rwkv6-1.6b":    (False, False, True,  True,  False, False),
+        "gemma2-27b":    (False, False, False, False, True,  False),
+    }
+    for arch, want in rows.items():
+        c = get_config(arch).decode_caps
+        got = (c.pageable, c.prefix_shareable, c.needs_exact_prefill,
+               c.constant_state, c.windowed, c.cross_cache)
+        assert got == want, (arch, got, want)
+
+
+def test_capability_gated_admission():
+    """Feature requests an arch cannot honour are rejected loudly."""
+    cfg, params = _params("rwkv6-1.6b")
+    with pytest.raises(ValueError, match="pageable"):
+        ContinuousScheduler(params, cfg, POL, batch=2, max_len=32,
+                            cache_mode="paged")
+    cfg2, params2 = _params("jamba-1.5-large-398b")
+    with pytest.raises(ValueError, match="prefix_shareable"):
+        ContinuousScheduler(params2, cfg2, POL, batch=2, max_len=32,
+                            cache_mode="paged", prefix_cache=True)
+    cfg3, params3 = _params("whisper-small")
+    sched = ContinuousScheduler(params3, cfg3, POL, batch=2, max_len=32)
+    with pytest.raises(ValueError, match="enc_frames"):
+        sched.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Length-masked recurrent prefill (the PR 8 bugfix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-1.5-large-398b"])
+def test_padded_slot_prefill_state_bitidentical(arch):
+    """A right-padded slot prefill must leave the slot's recurrent state
+    bit-identical to an unpadded prefill of the true prompt: pad tokens step
+    mamba/rwkv scans with the exact fp identity and the masked scan runs
+    sequentially (length-independent combine tree)."""
+    cfg, params = _params(arch)
+    max_len, bucket = 32, 16
+    rng = np.random.default_rng(0)
+    for plen in (3, 7, 11, 16):
+        prompt = rng.integers(1, cfg.vocab_size, size=plen, dtype=np.int32)
+        # padded: through the serving slot prefill into slot 1 of 2
+        state = T.init_decode_state(cfg, 2, max_len, jnp.float32)
+        toks, length = _bucketed(prompt, bucket)
+        logits_pad, state = prefill_into_slot(params, toks, length, state,
+                                              1, cfg, POL)
+        # unpadded: natural-width masked prefill (greedy_generate's path)
+        ref = T.init_decode_state(cfg, 1, max_len, jnp.float32)
+        logits_ref, ref = T.prefill(
+            params, jnp.asarray(prompt)[None], cfg, POL, state=ref,
+            lengths=jnp.full((1,), plen, jnp.int32), moe_impl="dense")
+        np.testing.assert_array_equal(np.asarray(logits_pad),
+                                      np.asarray(logits_ref)[0])
+        assert int(state["pos"][1]) == plen
+        for st_pad, st_ref in zip(state["blocks"], ref["blocks"]):
+            for key in st_ref:
+                if key == "cache":
+                    continue  # attention KV is covered by kv_len masking
+                pad_rows = jax.tree_util.tree_map(
+                    lambda l: np.asarray(l)[:, 1], st_pad[key])
+                ref_rows = jax.tree_util.tree_map(
+                    lambda l: np.asarray(l)[:, 0], st_ref[key])
+                jax.tree_util.tree_map(
+                    np.testing.assert_array_equal, pad_rows, ref_rows)
+
+
+def test_staggered_recurrent_slots_match_independent_decode():
+    """Mirror of the PR 1 attention test for a pure-recurrent arch: slots
+    prefilled at different times to different lengths decode exactly as
+    independent single-request runs."""
+    cfg, params = _params("rwkv6-1.6b")
+    max_len, bucket = 32, 16
+    rng = np.random.default_rng(1)
+    prompt_a = rng.integers(1, cfg.vocab_size, size=5, dtype=np.int32)
+    prompt_b = rng.integers(1, cfg.vocab_size, size=11, dtype=np.int32)
+
+    state = T.init_decode_state(cfg, 2, max_len, jnp.float32)
+    ta, la = _bucketed(prompt_a, bucket)
+    logits_a, state = prefill_into_slot(params, ta, la, state, 0, cfg, POL)
+    got_a = [int(jnp.argmax(logits_a))]
+    cur = np.zeros((2, 1), np.int32)
+    cur[0, 0] = got_a[0]
+    for _ in range(3):  # slot 0 decodes alone (slot 1 zero-state garbage)
+        lg, state = T.decode_step(params, jnp.asarray(cur), state, cfg, POL,
+                                  moe_impl="dense")
+        got_a.append(int(jnp.argmax(lg[0])))
+        cur[0, 0] = got_a[-1]
+    tb, lb = _bucketed(prompt_b, bucket)
+    logits_b, state = prefill_into_slot(params, tb, lb, state, 1, cfg, POL)
+    got_b = [int(jnp.argmax(logits_b))]
+    cur[1, 0] = got_b[0]
+    for _ in range(4):
+        lg, state = T.decode_step(params, jnp.asarray(cur), state, cfg, POL,
+                                  moe_impl="dense")
+        got_a.append(int(jnp.argmax(lg[0])))
+        got_b.append(int(jnp.argmax(lg[1])))
+        cur[0, 0], cur[1, 0] = got_a[-1], got_b[-1]
+
+    ref_a = np.asarray(greedy_generate(params, jnp.asarray(prompt_a)[None],
+                                       cfg, POL, max_new=8,
+                                       max_len=max_len))[0]
+    ref_b = np.asarray(greedy_generate(params, jnp.asarray(prompt_b)[None],
+                                       cfg, POL, max_new=5,
+                                       max_len=max_len))[0]
+    assert got_a == list(ref_a)
+    assert got_b == list(ref_b)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-level bit-exactness across the architecture zoo
+# ---------------------------------------------------------------------------
+
+def _run_sched_vs_greedy(arch, cache_mode="contiguous", batch=2,
+                         n_req=4, max_new=6):
+    cfg, params = _params(arch)
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab_size, size=int(n), dtype=np.int32)
+               for n in rng.integers(3, 9, size=n_req)]
+    frames = [(0.1 * rng.standard_normal(
+        (cfg.enc_seq, cfg.d_model))).astype(np.float32)
+        for _ in prompts] if cfg.is_encoder_decoder else [None] * n_req
+    sched = ContinuousScheduler(params, cfg, POL, batch=batch, max_len=64,
+                                prefill_len=8, cache_dtype=jnp.float32,
+                                cache_mode=cache_mode)
+    for i, pr in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=pr, max_new_tokens=max_new,
+                             enc_frames=frames[i]))
+    done = {r.rid: r for r in sched.run()}
+    assert len(done) == n_req
+    for i, pr in enumerate(prompts):
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["enc_frames"] = jnp.asarray(frames[i])[None]
+        ref = np.asarray(greedy_generate(
+            params, jnp.asarray(pr)[None], cfg, POL, max_new=max_new,
+            max_len=64, **kw))[0]
+        np.testing.assert_array_equal(done[i].output, ref,
+                                      err_msg=f"{arch} rid={i}")
+    return sched
+
+
+def test_continuous_scheduler_rwkv6_matches_greedy():
+    """Recurrent O(1)-state slots through the shared scheduler: admission,
+    EOS-free budget eviction and refill, bit-exact vs greedy_generate --
+    with NO KV cache at all (cache_bytes == 0)."""
+    sched = _run_sched_vs_greedy("rwkv6-1.6b")
+    assert sched.stats.cache_bytes == 0
+    assert sched.stats.state_bytes > 0
+    assert sched.stats.prefills == 4
+
+
+def test_continuous_scheduler_jamba_paged_matches_greedy():
+    """Hybrid slots: plain-attn layers page through the pool while mamba
+    layers carry per-slot scan state; eviction frees pages AND zeroes the
+    recurrent rows, refill rebuilds both -- outputs stay bit-exact."""
+    sched = _run_sched_vs_greedy("jamba-1.5-large-398b", cache_mode="paged")
+    assert sched.stats.state_bytes > 0      # the mamba/rwkv leaves
+    assert sched.stats.cache_bytes > 0      # the paged attn layers
+    assert sched.stats.preemptions == 0
+
+
+def test_continuous_scheduler_whisper_matches_greedy():
+    """Encoder-decoder slots: per-request enc_frames fill the slot's
+    cross-attn cache at admission; refills must not perturb neighbours."""
+    _run_sched_vs_greedy("whisper-small")
+
+
+def test_whisper_refill_preserves_survivor_cross_cache():
+    """Refilling slot 0 with a different request (different audio!) leaves
+    slot 1's subsequent logits bit-identical to a run without the refill:
+    the cross-attn cache scatter touches only the refilled row."""
+    cfg, params = _params("whisper-small")
+    max_len, bucket = 32, 8
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, size=n, dtype=np.int32)
+               for n in (5, 7, 4)]
+    frames = [jnp.asarray(0.1 * rng.standard_normal(
+        (1, cfg.enc_seq, cfg.d_model)), jnp.float32) for _ in range(3)]
+
+    def prefill_both():
+        state = T.init_decode_state(cfg, 2, max_len, jnp.float32,
+                                    enc_len=cfg.enc_seq)
+        cur = np.zeros((2, 1), np.int32)
+        for i in (0, 1):
+            t, l = _bucketed(prompts[i], bucket)
+            lg, state = prefill_into_slot(params, t, l, state, i, cfg, POL,
+                                          enc_frames=frames[i])
+            cur[i, 0] = int(jnp.argmax(lg))
+        return state, cur
+
+    def decode(state, cur, n):
+        out = []
+        for _ in range(n):
+            lg, state = T.decode_step(params, jnp.asarray(cur), state, cfg,
+                                      POL, moe_impl="dense")
+            out.append(np.asarray(lg))
+            cur = np.asarray(jnp.argmax(lg, -1))[:, None].astype(np.int32)
+        return state, cur, out
+
+    # run A: decode 2, refill slot 0 (new prompt AND new audio), decode 3
+    state, cur = prefill_both()
+    state, cur, _ = decode(state, cur, 2)
+    t, l = _bucketed(prompts[2], bucket)
+    lg, state = prefill_into_slot(params, t, l, state, 0, cfg, POL,
+                                  enc_frames=frames[2])
+    cur_a = cur.copy()
+    cur_a[0, 0] = int(jnp.argmax(lg))
+    _, _, logits_a = decode(state, cur_a, 3)
+
+    # run B: no refill
+    state, cur = prefill_both()
+    state, cur, _ = decode(state, cur, 2)
+    _, _, logits_b = decode(state, cur, 3)
+
+    for a, b in zip(logits_a, logits_b):
+        np.testing.assert_array_equal(a[1], b[1])
+
+
+# ---------------------------------------------------------------------------
+# Adapter mechanics
+# ---------------------------------------------------------------------------
+
+def test_reset_slot_zeroes_state_rows():
+    cfg, params = _params("rwkv6-1.6b")
+    adapter = SlotStateAdapter(params, cfg, POL, batch=2, max_len=32,
+                               cache_dtype=jnp.float32)
+    assert adapter.has_slot_state
+    state = adapter.init_state()
+    toks, length = _bucketed(np.arange(1, 6, dtype=np.int32), 8)
+    _, state = adapter.prefill(state, toks, length, 1)
+    # slot 1 carries non-zero scan state; slot 0 stays zero
+    nz = sum(float(np.abs(np.asarray(l)[:, 1]).sum())
+             for blk in state["blocks"]
+             for l in jax.tree_util.tree_leaves(blk))
+    assert nz > 0
+    state = adapter.reset_slot(state, 1)
+    for blk in state["blocks"]:
+        for leaf in jax.tree_util.tree_leaves(blk):
+            np.testing.assert_array_equal(np.asarray(leaf)[:, 1],
+                                          np.zeros_like(np.asarray(leaf)[:, 1]))
+    assert int(state["pos"][1]) == 0
+
+
+def test_state_bytes_accounting():
+    """state_bytes counts recurrent + cross leaves; cache_bytes the KV.
+    Dense archs are all-cache, rwkv6 all-state, whisper and jamba both."""
+    for arch, has_state, has_cache in [
+            ("deepseek-7b", False, True),
+            ("rwkv6-1.6b", True, False),
+            ("jamba-1.5-large-398b", True, True),
+            ("whisper-small", True, True)]:
+        cfg, params = _params(arch)
+        adapter = SlotStateAdapter(params, cfg, POL, batch=2, max_len=32)
+        assert (adapter.state_bytes() > 0) == has_state, arch
+        assert (adapter.cache_bytes() > 0) == has_cache, arch
+        assert adapter.has_slot_state == has_state, arch
