@@ -21,6 +21,7 @@ MODULES = [
     ("table7", "benchmarks.table7_cost"),
     ("fig8", "benchmarks.fig8_opt_equivalence"),
     ("roofline", "benchmarks.roofline"),
+    ("train_scaling", "benchmarks.train_scaling"),
     ("serve", "benchmarks.serve_continuous"),
     ("serve_paged", "benchmarks.serve_paged"),
     ("serve_prefix", "benchmarks.serve_prefix"),

@@ -1,0 +1,286 @@
+"""Measured comm/compute weak-scaling of the DP training path (paper §4.4).
+
+  PYTHONPATH=src python benchmarks/train_scaling.py \
+      [--devices 1,2,4] [--per-batch 8] [--seq 32] [--steps 5] \
+      [--out BENCH_train.json] [--quick]
+
+Unlike ``fig3_weak_scaling.py`` (purely analytic, paper constants), this
+bench RUNS the ``dp_shardmap`` train step on forced host-device meshes and
+measures it.  XLA locks the device count at first import, so the parent
+re-execs itself as one ``--worker`` subprocess per device count (the same
+trick as tests/conftest.run_multidevice); each worker times real train
+steps for every (collective strategy x grad compression) cell and records
+a short loss trajectory per cell.
+
+Reported per cell:
+
+* ``step_ms``            -- median measured wall time per optimizer step;
+* ``exchanged_mb``       -- per-worker gradient wire bytes for one step
+                            (core/collectives.exchange_bytes_per_step: the
+                            2(n-1)/n ring volume at the wire dtype, int8
+                            incl. per-bucket scales);
+* ``final_loss`` / ``loss_dev`` -- trajectory fidelity vs the same
+                            strategy's uncompressed run (error feedback on);
+* ``achieved_eff``       -- measured weak-scaling efficiency
+                            t_step(1 device) / t_step(n devices) at fixed
+                            per-device batch;
+* ``model_eff``          -- the fig3 analytic model evaluated at our
+                            MEASURED single-device compute time and this
+                            cell's wire bytes on the paper's 10 Gb/s link:
+                            what this compression would buy on the paper's
+                            cluster (host-device "links" are memcpys, so
+                            achieved_eff upper-bounds a real network).
+
+The derived block carries the acceptance numbers: int8 moves >=3x fewer
+gradient bytes than fp32 at a loss trajectory within tolerance.  Merge-
+written to the ``train_scaling`` section of BENCH_train.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+STRATEGIES = ("psum", "ring", "hierarchical", "bucketed")
+COMPRESSIONS = ("none", "fp16", "int8")
+
+
+# ---------------------------------------------------------------------------
+# Worker: runs inside one forced-device-count subprocess.
+# ---------------------------------------------------------------------------
+
+def worker(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config, smoke_variant
+    from repro.configs.base import InputShape, TrainConfig
+    from repro.core.amp import make_policy
+    from repro.core.collectives import exchange_bytes_per_step
+    from repro.core.compat import make_mesh
+    from repro.models import api
+    from repro.train.train_step import init_train_state, make_train_step_dp
+    from repro.utils import tree_count
+
+    try:
+        from benchmarks.common import time_train_steps
+    except ImportError:
+        sys.path.insert(0, str(REPO))
+        from benchmarks.common import time_train_steps
+
+    n = args.devices
+    assert len(jax.devices()) == n, (len(jax.devices()), n)
+    cfg = smoke_variant(get_config(args.arch), d_model=args.d_model)
+    shape = InputShape("bench", args.seq, args.per_batch * n, "train")
+    params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_params = tree_count(params)
+    batches = [api.make_synth_batch(jax.random.PRNGKey(i), cfg, shape)
+               for i in range(args.steps)]
+
+    if n == args.max_devices:
+        cells = [(s, c) for s in STRATEGIES for c in COMPRESSIONS]
+    else:  # scaling curve across device counts: one strategy, every wire
+        cells = [("psum", c) for c in COMPRESSIONS]
+    if args.quick:
+        cells = [(s, c) for s, c in cells if s in ("psum", "bucketed")]
+
+    results = {}
+    for strategy, comp in cells:
+        if strategy == "hierarchical" and n >= 2:
+            mesh = make_mesh((2, n // 2), ("pod", "data"))
+            pod = 2
+        else:
+            mesh = make_mesh((n,), ("data",))
+            pod = 1
+        tcfg = TrainConfig(precision="f32", accum_steps=args.accum,
+                           collective_strategy=strategy,
+                           grad_compression=comp, total_steps=100,
+                           warmup_steps=2, bucket_bytes=args.bucket_bytes)
+        step_fn, _ = make_train_step_dp(cfg, tcfg, mesh, shape)
+        pol = make_policy("f32")
+
+        state = init_train_state(params, pol, tcfg, world=n)
+        sec = time_train_steps(step_fn, state, batches[0],
+                               iters=3 if args.quick else 6, warmup=2)
+
+        state = init_train_state(params, pol, tcfg, world=n)
+        losses = []
+        for b in batches:
+            state, m = step_fn(state, b)
+            losses.append(float(np.asarray(m["loss"])))
+        wire = exchange_bytes_per_step(
+            n_params, strategy=strategy, compression=comp, world=n, pod=pod,
+            bucket_bytes=args.bucket_bytes)
+        results[f"{strategy}/{comp}"] = {
+            "step_ms": round(sec * 1e3, 2),
+            "exchanged_mb": round(wire / 2 ** 20, 4),
+            "final_loss": round(losses[-1], 6),
+            "losses": [round(l, 6) for l in losses],
+            "finite": bool(np.all(np.isfinite(losses))),
+        }
+    print("RESULT_JSON:" + json.dumps(
+        {"devices": n, "n_params": int(n_params), "cells": results}))
+
+
+# ---------------------------------------------------------------------------
+# Parent: one subprocess per device count, then efficiency + BENCH write.
+# ---------------------------------------------------------------------------
+
+def run_worker(n: int, args) -> dict:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = str(REPO / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, str(Path(__file__).resolve()), "--worker",
+           "--devices", str(n), "--max-devices", str(max(args.device_list)),
+           "--per-batch", str(args.per_batch), "--seq", str(args.seq),
+           "--steps", str(args.steps), "--arch", args.arch,
+           "--d-model", str(args.d_model), "--accum", str(args.accum),
+           "--bucket-bytes", str(args.bucket_bytes)]
+    if args.quick:
+        cmd.append("--quick")
+    proc = subprocess.run(cmd, env=env, cwd=REPO, capture_output=True,
+                          text=True, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(f"worker n={n} failed:\n{proc.stdout}\n"
+                           f"{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT_JSON:"):
+            return json.loads(line[len("RESULT_JSON:"):])
+    raise RuntimeError(f"worker n={n} produced no RESULT_JSON:\n"
+                       f"{proc.stdout}\n{proc.stderr}")
+
+
+def main(argv=()):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--devices", type=int, default=4)
+    ap.add_argument("--max-devices", type=int, default=4)
+    ap.add_argument("--device-counts", default="1,2,4")
+    ap.add_argument("--arch", default="bert-large")
+    ap.add_argument("--d-model", type=int, default=64)
+    ap.add_argument("--per-batch", type=int, default=8,
+                    help="per-device batch (weak scaling holds this fixed)")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=5)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--bucket-bytes", type=int, default=1 << 16)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args(list(argv))
+
+    if args.worker:
+        worker(args)
+        return
+
+    try:
+        from benchmarks.serve_paged import write_section
+        from benchmarks.common import PAPER
+        from benchmarks.fig3_weak_scaling import OVERLAP, eff_from
+    except ImportError:
+        sys.path.insert(0, str(REPO))
+        from benchmarks.serve_paged import write_section
+        from benchmarks.common import PAPER
+        from benchmarks.fig3_weak_scaling import OVERLAP, eff_from
+
+    args.device_list = [int(x) for x in args.device_counts.split(",")]
+    scaling = {}
+    for n in args.device_list:
+        print(f"# measuring {n}-device mesh ...")
+        scaling[n] = run_worker(n, args)
+
+    nmax = max(args.device_list)
+    base_ms = scaling[1]["cells"]["psum/none"]["step_ms"] \
+        if 1 in scaling else None
+    compute_s = (base_ms or 0.0) / 1e3
+
+    for n, res in scaling.items():
+        for cell, r in res["cells"].items():
+            if base_ms:
+                r["achieved_eff"] = round(base_ms / r["step_ms"], 3)
+            # fig3's roofline fed with our measured compute and this cell's
+            # wire bytes on the paper's 10 Gb/s inter-node link
+            comm_s = r["exchanged_mb"] * 2 ** 20 / PAPER["network_bps"]
+            r["model_eff"] = round(eff_from(comm_s, compute_s), 3) \
+                if compute_s else None
+
+    big = scaling[nmax]["cells"]
+    derived = {}
+    for strat in sorted({c.split("/")[0] for c in big}):
+        none = big.get(f"{strat}/none")
+        if none is None:
+            continue
+        for comp in ("fp16", "int8"):
+            cell = big.get(f"{strat}/{comp}")
+            if cell is None:
+                continue
+            cell["loss_dev"] = round(
+                abs(cell["final_loss"] - none["final_loss"]) /
+                max(abs(none["final_loss"]), 1e-9), 6)
+    if "psum/none" in big and "psum/int8" in big:
+        derived["int8_bytes_reduction"] = round(
+            big["psum/none"]["exchanged_mb"] /
+            max(big["psum/int8"]["exchanged_mb"], 1e-12), 2)
+        derived["fp16_bytes_reduction"] = round(
+            big["psum/none"]["exchanged_mb"] /
+            max(big["psum/fp16"]["exchanged_mb"], 1e-12), 2)
+        derived["int8_loss_dev"] = big["psum/int8"]["loss_dev"]
+        derived["max_loss_dev"] = max(
+            c.get("loss_dev", 0.0) for c in big.values())
+        derived["all_finite"] = all(c["finite"] for c in big.values())
+
+    # fig3 at paper scale: BERT-large gradients on the 32-node 10 Gb/s
+    # cluster, with the wire dtype as the new lever (the smoke model above
+    # is compute-bound on that link, so the lever only shows at full size)
+    from benchmarks.fig3_weak_scaling import COMPUTE_1
+    from repro.core.collectives import exchange_bytes_per_step
+    paper_params = int(PAPER["bert_large_params"])
+    derived["paper_scale_model_eff"] = {
+        comp: round(eff_from(
+            exchange_bytes_per_step(paper_params, strategy="ring",
+                                    compression=comp, world=PAPER["nodes"])
+            / PAPER["network_bps"], 4 * COMPUTE_1), 3)
+        for comp in COMPRESSIONS}
+
+    for n in sorted(scaling):
+        for cell in sorted(scaling[n]["cells"]):
+            r = scaling[n]["cells"][cell]
+            print(f"n={n} {cell:20s} step={r['step_ms']:8.2f}ms "
+                  f"wire={r['exchanged_mb']:8.4f}MB "
+                  f"eff={r.get('achieved_eff', '-')} "
+                  f"model_eff={r.get('model_eff', '-')} "
+                  f"loss={r['final_loss']:.5f}")
+    if derived:
+        print(f"int8 wire-bytes reduction x{derived['int8_bytes_reduction']}"
+              f" | fp16 x{derived['fp16_bytes_reduction']}"
+              f" | int8 loss dev {derived['int8_loss_dev']}"
+              f" | max loss dev {derived['max_loss_dev']}"
+              f" | all finite {derived['all_finite']}")
+        print("paper-scale (340M grads, 32 nodes @10Gb/s, accum 4) "
+              "model eff: " + " ".join(
+                  f"{k}={v}" for k, v in
+                  derived["paper_scale_model_eff"].items()))
+
+    payload = {
+        "bench": "train_scaling",
+        "config": {"arch": args.arch, "d_model": args.d_model,
+                   "per_batch": args.per_batch, "seq": args.seq,
+                   "steps": args.steps, "accum": args.accum,
+                   "bucket_bytes": args.bucket_bytes,
+                   "device_counts": args.device_list,
+                   "overlap_model": OVERLAP},
+        "n_params": scaling[nmax]["n_params"],
+        "scaling": {str(n): res["cells"] for n, res in scaling.items()},
+        "derived": derived,
+    }
+    write_section(args.out, "train_scaling", payload)
+    print(f"wrote {args.out} [train_scaling]")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Validate BENCH_*.json sections against the committed schema (key sets).
+
+  python scripts/bench_check.py [--strict] [files...]
+
+Every benchmark merge-writes its own section into a shared BENCH_*.json
+(see benchmarks/serve_paged.write_section); this guard keeps those files
+honest across PRs: a freshly written section whose key set drifts from the
+schema below (renamed metric, dropped derived block, unknown section) gets
+a loud warning in CI logs -- but NEVER fails the build unless ``--strict``
+is passed, because bench payloads legitimately grow.  Update SCHEMAS in
+the same PR that changes a bench's payload shape.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+# Required top-level keys per section, plus required keys inside "derived"
+# (the numbers acceptance criteria ride on).  Extra keys are fine.
+SCHEMAS = {
+    "serve_paged": {
+        "keys": {"bench", "config", "num_pages", "modes", "derived"},
+        "derived": {"int8_cache_bytes_reduction", "paged_cache_bytes_reduction",
+                    "paged_decode_tok_s_ratio", "int8_decode_tok_s_ratio",
+                    "paged_output_mismatches"},
+    },
+    "serve_prefix": {
+        "keys": {"bench", "config", "num_pages", "modes"},
+        "derived": set(),
+    },
+    "serve_multiarch": {
+        "keys": {"bench", "config", "archs"},
+        "derived": set(),
+    },
+    "train_scaling": {
+        "keys": {"bench", "config", "n_params", "scaling", "derived"},
+        "derived": {"int8_bytes_reduction", "fp16_bytes_reduction",
+                    "int8_loss_dev", "max_loss_dev", "all_finite",
+                    "paper_scale_model_eff"},
+    },
+}
+
+
+def check_file(path: str) -> list:
+    warnings = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: expected a dict of sections"]
+    for section, payload in doc.items():
+        schema = SCHEMAS.get(section)
+        if schema is None:
+            warnings.append(f"{path}[{section}]: unknown section "
+                            f"(add it to scripts/bench_check.py SCHEMAS)")
+            continue
+        if not isinstance(payload, dict):
+            warnings.append(f"{path}[{section}]: payload is not a dict")
+            continue
+        missing = schema["keys"] - set(payload)
+        if missing:
+            warnings.append(f"{path}[{section}]: missing keys "
+                            f"{sorted(missing)}")
+        dmissing = schema["derived"] - set(payload.get("derived", {}) or {})
+        if dmissing:
+            warnings.append(f"{path}[{section}]: derived block missing "
+                            f"{sorted(dmissing)}")
+    return warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None)
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on drift (default: warn only)")
+    args = ap.parse_args(argv)
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("bench_check: no BENCH_*.json files found")
+        return 0
+    warnings = []
+    for path in files:
+        warnings += check_file(path)
+    for w in warnings:
+        print(f"bench_check: WARNING: {w}")
+    if not warnings:
+        print(f"bench_check: {len(files)} file(s) match the committed schema")
+    return 1 if (warnings and args.strict) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,6 +8,9 @@
 #   bash scripts/ci.sh prefix     # prefix-cache smoke (reclaim-before-preempt)
 #   bash scripts/ci.sh faults     # chaos smoke: crash -> resume bit-identical
 #   bash scripts/ci.sh multiarch  # one scheduler, every arch family smoke
+#   bash scripts/ci.sh train-dp   # 4-device DP train matrix: every collective
+#                                 # strategy bit-matches the psum loss, plus a
+#                                 # compressed (int8 + error feedback) run
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
 # in the decode path surface without accelerators.  The paged smoke runs the
@@ -22,11 +25,22 @@
 # The multiarch smoke drives the continuous scheduler through one config
 # per architecture family (dense, recurrent, hybrid, encoder-decoder) so
 # the slot-state contract's admit/prefill/evict paths run on every PR.
+# The train-dp step forces 4 host devices and runs 5 real dp_shardmap
+# training steps per collective strategy (psum / ppermute ring /
+# hierarchical / bucketed-overlap), asserting every strategy's final loss
+# BIT-MATCHES the psum reference (the paper's semantics-preserving claim),
+# then one int8-compressed exchange run (error feedback on) asserting the
+# losses stay finite and land within tolerance of the uncompressed
+# trajectory.  Loss logs land in ci-artifacts/ for upload.
+# The bench-check step validates every BENCH_*.json section against the
+# committed schema (scripts/bench_check.py) -- warnings only, never a
+# failure, so bench drift is visible without blocking merges.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 step="${1:-all}"
+mkdir -p ci-artifacts
 
 if [[ "$step" == "all" || "$step" == "tests" ]]; then
     echo "=== tier-1: pytest ==="
@@ -140,6 +154,8 @@ for s, loss in ref.items():
     assert got[s] == loss, f"step {s}: resumed {got[s]!r} != ref {loss!r}"
 print(f"crash->resume OK: {len(ref)} steps bit-identical")
 EOF
+    cp "$work"/ref.jsonl ci-artifacts/faults_ref.jsonl
+    cp "$work"/loss.jsonl ci-artifacts/faults_resume.jsonl
     echo "=== faults chaos smoke: torn-checkpoint fallback ==="
     python - <<'EOF'
 import glob, tempfile
@@ -159,6 +175,69 @@ assert step == 1
 np.testing.assert_array_equal(np.asarray(got["w"]), tree["w"])
 print("torn-checkpoint fallback OK: restored step 1")
 EOF
+fi
+
+if [[ "$step" == "all" || "$step" == "train-dp" ]]; then
+    echo "=== train-dp matrix: 4 devices, strategies bit-match psum + compressed run ==="
+    # device-count flag goes LAST: an earlier step may have exported its own
+    # count into XLA_FLAGS and the final occurrence wins
+    XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
+    python - <<'EOF'
+import json
+import jax
+import numpy as np
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import InputShape, TrainConfig
+from repro.core.amp import make_policy
+from repro.core.compat import make_mesh
+from repro.models import api
+from repro.train.train_step import init_train_state, make_train_step_dp
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = smoke_variant(get_config("bert-large"), d_model=64)
+shape = InputShape("ci", 32, 16, "train")
+params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+batches = [api.make_synth_batch(jax.random.PRNGKey(i), cfg, shape)
+           for i in range(5)]
+
+def run(strategy, comp="none"):
+    if strategy == "hierarchical":
+        mesh = make_mesh((2, 2), ("pod", "data"))
+    else:
+        mesh = make_mesh((4,), ("data",))
+    tcfg = TrainConfig(precision="f32", accum_steps=1,
+                       collective_strategy=strategy, grad_compression=comp,
+                       total_steps=50, warmup_steps=2, bucket_bytes=1 << 16)
+    step, _ = make_train_step_dp(cfg, tcfg, mesh, shape)
+    state = init_train_state(params, make_policy("f32"), tcfg, world=4)
+    losses = []
+    for b in batches:
+        state, m = step(state, b)
+        losses.append(float(np.asarray(m["loss"])))
+    return losses
+
+log = {}
+log["psum"] = ref = run("psum")
+for strategy in ("ring", "hierarchical", "bucketed"):
+    log[strategy] = got = run(strategy)
+    assert got == ref, (
+        f"{strategy} loss trajectory diverged from psum:\n{got}\n{ref}")
+    print(f"{strategy:12s} == psum  ({len(ref)} steps bit-identical)")
+for comp in ("int8",):
+    log[f"psum+{comp}"] = got = run("psum", comp)
+    assert all(np.isfinite(got)), f"{comp} produced non-finite losses: {got}"
+    dev = max(abs(a - b) / abs(b) for a, b in zip(got, ref))
+    assert dev < 0.02, f"{comp} trajectory drifted {dev:.4f} from psum: {got}"
+    print(f"psum+{comp:5s} finite, max rel dev {dev:.2e} (< 0.02)")
+with open("ci-artifacts/train_dp_losses.json", "w") as f:
+    json.dump(log, f, indent=2)
+print("train-dp matrix OK")
+EOF
+fi
+
+if [[ "$step" == "all" || "$step" == "bench-check" ]]; then
+    echo "=== bench schema guard (non-blocking on drift) ==="
+    python scripts/bench_check.py
 fi
 
 echo "CI OK"

@@ -273,6 +273,11 @@ class TrainConfig:
     accum_steps: int = 4               # paper §5.2 uses 4
     collective_strategy: str = "psum"  # psum | ring | hierarchical | bucketed
     bucket_bytes: int = 25 * 2 ** 20
+    # Compressed gradient exchange (core/collectives.py): quantise each
+    # ~bucket_bytes bucket before the reduce so the wire carries 2-byte
+    # (fp16) or 1-byte (int8, per-bucket scale) words, with the quantisation
+    # residual carried in TrainState.err (error feedback).  DP mode only.
+    grad_compression: str = "none"     # none | fp16 | int8
     optimizer: str = "lamb"            # lamb | adamw
     learning_rate: float = 1e-4        # paper Table 6
     warmup_steps: int = 100

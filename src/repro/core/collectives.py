@@ -20,11 +20,46 @@ PyTorch DDP overlaps by all-reducing gradient buckets as backward produces
 them; under XLA the analogous lever is issuing one collective per bucket
 (instead of one giant fused all-reduce) so the latency-hiding scheduler can
 pipeline collectives with the remaining backward compute.
+
+Compressed gradient exchange (``TrainConfig.grad_compression``, paper §4.4's
+fp16 wire + "How to Train BERT with an Academic Budget" / 1-bit-Adam-style
+error feedback):
+
+  * ``fp16``  -- every leaf is cast to fp16 *before* the reduce, so whichever
+    wire schedule the strategy picks (psum / ppermute ring / hierarchical /
+    bucketed) moves 2-byte words: a straight 2x byte cut that composes with
+    all four strategies verbatim.
+  * ``int8``  -- gradients are packed into ~``bucket_bytes`` buckets (the
+    same ``bucket_leaves`` grouping the overlap path uses) and each bucket is
+    symmetrically quantised with ONE fp32 scale (absmax/127 -- mirroring the
+    per-page scales of the int8 KV cache).  Int8 partial sums overflow and
+    per-hop requantisation compounds error, so the int8 wire schedule is the
+    compressed reduce-scatter + all-gather decomposition (DeepSpeed's
+    compressed all-reduce; the same 2(n-1)/n volume a ring moves):
+    ``all_to_all`` ships each worker's n-th chunk shards as int8, shards are
+    dequantised and summed locally, requantised with a fresh per-shard scale,
+    and ``all_gather``-ed back as int8 -- ~4x fewer wire bytes than fp32 for
+    any world size (see ``exchange_bytes_per_step``).  The strategy knob
+    still controls bucket granularity (``bucketed``) and is kept orthogonal
+    in configs/benchmarks.
+  * **Error feedback**: quantisation is lossy, so the residual
+    ``(g + e) - dequantise(quantise(g + e))`` is carried in
+    ``TrainState.err`` and added back into the next step's gradients before
+    compression -- the compression error becomes delayed, not dropped, and
+    the averaged trajectory tracks the uncompressed one (1-bit Adam's
+    argument).  The residual is purely local -- each worker's own error --
+    so ``TrainState.err`` stacks it along a leading world dim sharded over
+    the DP axes (checkpoints carry every worker's buffer; exact-resume is
+    bit-identical); the int8 second-stage requantisation error is NOT fed back
+    (it would need a per-shard buffer) and is bounded by absmax/254 per
+    element per step.  Non-finite local gradients (AMP overflow) are zeroed
+    before quantisation and the residual is held, so a skipped step can
+    never poison the feedback buffer.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional, Sequence
+from typing import Any, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +67,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.compat import axis_size
+from repro.utils import all_finite
 
 
 # ---------------------------------------------------------------------------
@@ -108,7 +144,10 @@ def hierarchical_psum(x: jax.Array, fast_axis, slow_axis) -> jax.Array:
         nf *= axis_size(a)
     flat = x.reshape(-1)
     if flat.size % nf != 0:
-        return jax.lax.psum(jax.lax.psum(x, fast), slow_axis)
+        # single fused psum, not psum(psum(fast), slow): the nested form
+        # sums in a different order and drifts from the psum strategy in
+        # the last float bit (scalar losses land here, size 1 % nf != 0)
+        return jax.lax.psum(x, tuple(fast) + (slow_axis,))
     shard = jax.lax.psum_scatter(
         flat.reshape(nf, -1), fast, scatter_dimension=0, tiled=False)
     shard = jax.lax.psum(shard, slow_axis)
@@ -182,3 +221,158 @@ def reduce_gradients(grads: Any, *, strategy: str, data_axes: Sequence[str],
         assert pod_axis is not None, "hierarchical needs a pod axis"
         return hierarchical_psum_tree(grads, data_axes, pod_axis)
     raise ValueError(f"unknown collective strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Compressed gradient exchange (fp16 / int8 wire) with error feedback.
+# ---------------------------------------------------------------------------
+
+GRAD_COMPRESSIONS = ("none", "fp16", "int8")
+
+
+def quantize_int8(flat: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-bucket int8: one fp32 scale = absmax/127 (KV-page style)."""
+    amax = jnp.max(jnp.abs(flat))
+    scale = (jnp.maximum(amax, 1e-12) / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _group_size(axes) -> int:
+    n = 1
+    for a in axes:
+        n *= axis_size(a)
+    return n
+
+
+def int8_two_stage_all_reduce(q: jax.Array, scale: jax.Array,
+                              axes) -> jax.Array:
+    """Sum an int8-quantised bucket over ``axes``; the wire carries int8.
+
+    Compressed reduce-scatter + all-gather (the ring decomposition):
+      1. ``all_to_all``: worker d receives every worker's d-th chunk as int8
+         (+ an all-gather of the tiny fp32 scales);
+      2. local dequantise-and-sum -> fully reduced fp32 shard d;
+      3. requantise the shard (fresh per-shard scale) and ``all_gather`` the
+         int8 shards back.
+    Per-worker wire volume: 2(n-1)/n * size int8 words -- 4x less than the
+    fp32 ring.  Must run inside shard_map with ``axes`` bound.  Returns the
+    fp32 SUM (same contract as ``psum``), identical on every worker.
+    """
+    name = axes[0] if len(tuple(axes)) == 1 else tuple(axes)
+    n = _group_size(tuple(axes))
+    if n == 1:
+        return dequantize_int8(q, scale)
+    size = q.size
+    pad = (-size) % n
+    q2d = jnp.pad(q, (0, pad)).reshape(n, -1)
+    shards = jax.lax.all_to_all(q2d, name, split_axis=0, concat_axis=0,
+                                tiled=True)                      # (n, m) int8
+    scales = jax.lax.all_gather(scale, name).reshape(-1)         # (n,) f32
+    partial = jnp.sum(shards.astype(jnp.float32) * scales[:, None], axis=0)
+    q2, s2 = quantize_int8(partial)
+    qg = jax.lax.all_gather(q2, name, tiled=True)                # (n*m,) int8
+    s2g = jax.lax.all_gather(s2, name).reshape(-1)               # (n,) f32
+    out = (qg.reshape(n, -1).astype(jnp.float32) * s2g[:, None]).reshape(-1)
+    return out[:size]
+
+
+def _tree_flat_views(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def compressed_reduce_gradients(
+        grads: Any, err: Any, *, strategy: str, mode: str,
+        data_axes: Sequence[str], pod_axis: Optional[str] = None,
+        bucket_bytes: int = 25 * 2 ** 20) -> Tuple[Any, Any, jax.Array]:
+    """Error-feedback compressed all-reduce of ``grads`` inside shard_map.
+
+    ``grads`` must already be in true (unscaled) gradient units so the
+    residual survives AMP loss-scale changes.  Returns
+    ``(summed_grads, new_err, finite)`` where ``summed_grads`` follows the
+    ``psum`` contract (caller divides by world size), ``new_err`` is the
+    local quantisation residual to carry into the next step, and ``finite``
+    is the *global* all-workers-finite flag (non-finite workers contribute
+    zeros and the residual is held unchanged).
+    """
+    assert mode in ("fp16", "int8"), mode
+    data_axes = tuple(data_axes)
+    axes = data_axes + ((pod_axis,) if pod_axis else ())
+    world = _group_size(axes)
+
+    fin = jnp.equal(
+        jax.lax.psum(all_finite(grads).astype(jnp.int32), axes), world)
+    x = jax.tree_util.tree_map(
+        lambda g, e: jnp.where(fin, g.astype(jnp.float32), 0.0) + e,
+        grads, err)
+
+    if mode == "fp16":
+        xc = jax.tree_util.tree_map(lambda v: v.astype(jnp.float16), x)
+        new_err = jax.tree_util.tree_map(
+            lambda v, c: v - c.astype(jnp.float32), x, xc)
+        hier_ok = strategy == "hierarchical" and pod_axis is not None
+        red = reduce_gradients(
+            xc, strategy=strategy if strategy != "hierarchical" or hier_ok
+            else "psum",
+            data_axes=data_axes, pod_axis=pod_axis, bucket_bytes=bucket_bytes)
+        red = jax.tree_util.tree_map(
+            lambda v: v.astype(jnp.float32), red)
+    else:
+        leaves, treedef = _tree_flat_views(x)
+        red_leaves = [None] * len(leaves)
+        err_leaves = [None] * len(leaves)
+        for bucket in bucket_leaves(x, bucket_bytes):
+            flat = jnp.concatenate(
+                [leaves[i].reshape(-1) for i in bucket])
+            q, scale = quantize_int8(flat)
+            local_deq = dequantize_int8(q, scale)
+            red_flat = int8_two_stage_all_reduce(q, scale, axes)
+            err_flat = flat - local_deq
+            off = 0
+            for i in bucket:
+                sz = leaves[i].size
+                red_leaves[i] = red_flat[off:off + sz].reshape(
+                    leaves[i].shape)
+                err_leaves[i] = err_flat[off:off + sz].reshape(
+                    leaves[i].shape)
+                off += sz
+        red = jax.tree_util.tree_unflatten(treedef, red_leaves)
+        new_err = jax.tree_util.tree_unflatten(treedef, err_leaves)
+
+    # a skipped (non-finite) step must not advance the feedback buffer
+    new_err = jax.tree_util.tree_map(
+        lambda ne, e: jnp.where(fin, ne, e), new_err, err)
+    return red, new_err, fin
+
+
+def exchange_bytes_per_step(n_params: int, *, strategy: str,
+                            compression: str = "none", world: int = 1,
+                            pod: int = 1,
+                            bucket_bytes: int = 25 * 2 ** 20) -> float:
+    """Analytic per-worker gradient-exchange wire bytes for one step.
+
+    The roofline/benchmark accounting behind BENCH_train.json: a ring (or
+    the equivalent reduce-scatter + all-gather pair) moves 2(n-1)/n words
+    per worker; hierarchical moves full-rate words on the fast link but only
+    the 1/n_fast shard across pods; int8 adds two fp32 scales per bucket per
+    hop-direction.  ``world`` is the total number of workers (including the
+    ``pod`` factor for hierarchical).
+    """
+    if world <= 1:
+        return 0.0
+    itemsize = {"none": 4, "fp16": 2, "int8": 1}[compression]
+    n_buckets = max(1, -(-n_params * 4 // bucket_bytes))
+    scale_overhead = 2 * 4 * n_buckets if compression == "int8" else 0
+    if strategy == "hierarchical" and pod > 1 and compression != "int8":
+        # int8's wire schedule is strategy-independent (flat two-stage
+        # exchange over all axes) -- it falls through to the flat formula
+        fast = world // pod
+        fast_bytes = 2 * (fast - 1) / fast * n_params * itemsize
+        slow_bytes = 2 * (pod - 1) / pod * (n_params / max(fast, 1)) * itemsize
+        return fast_bytes + slow_bytes
+    return 2 * (world - 1) / world * n_params * itemsize + scale_overhead

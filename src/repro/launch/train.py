@@ -3,6 +3,7 @@
   PYTHONPATH=src python -m repro.launch.train --arch deepseek-7b \
       --steps 50 --batch 8 --seq 256 [--smoke] [--precision bf16] \
       [--strategy psum|ring|hierarchical|bucketed] [--accum 4] \
+      [--dp --grad-compression none|fp16|int8] \
       [--ckpt-dir DIR --ckpt-every 100 --resume] [--loss-log FILE]
 
 ``--smoke`` swaps in the reduced same-family config so any architecture can
@@ -53,6 +54,10 @@ def main(argv=None):
     ap.add_argument("--strategy", default="psum")
     ap.add_argument("--dp", action="store_true",
                     help="paper-faithful pure-DP shard_map mode")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=("none", "fp16", "int8"),
+                    help="compress the gradient exchange (requires --dp); "
+                    "error feedback rides in TrainState and checkpoints")
     ap.add_argument("--pure-dp", action="store_true",
                     help="ZeRO-1 pure data parallelism (GSPMD mode)")
     ap.add_argument("--moe-impl", default="a2a")
@@ -72,8 +77,12 @@ def main(argv=None):
     if cfg.is_encoder_only:
         raise SystemExit("use examples/pretrain_bert.py for BERT")
 
+    if args.grad_compression != "none" and not args.dp:
+        raise SystemExit("--grad-compression requires --dp (the explicit-"
+                         "collective shard_map mode owns the wire format)")
     tcfg = TrainConfig(precision=args.precision, accum_steps=args.accum,
                        collective_strategy=args.strategy,
+                       grad_compression=args.grad_compression,
                        optimizer=args.optimizer, total_steps=args.steps,
                        warmup_steps=max(2, args.steps // 10),
                        moe_impl=args.moe_impl, pure_dp=args.pure_dp,
@@ -86,7 +95,8 @@ def main(argv=None):
     params, specs = api.init_params(jax.random.PRNGKey(args.seed), cfg)
     logger.info("arch %s: %.2fM params (smoke=%s)", cfg.arch_id,
                 tree_count(params) / 1e6, args.smoke)
-    state = init_train_state(params, policy, tcfg)
+    state = init_train_state(params, policy, tcfg,
+                             world=mesh.devices.size)
     del params
 
     if args.dp:
@@ -126,7 +136,7 @@ def main(argv=None):
 
     fingerprint = (f"{cfg.arch_id}:p={args.precision}:b={args.batch}x"
                    f"{args.seq}:opt={args.optimizer}:accum={args.accum}:"
-                   f"seed={args.seed}")
+                   f"seed={args.seed}:comp={args.grad_compression}")
 
     metrics_hook = None
     if args.loss_log:

@@ -45,11 +45,28 @@ from repro.utils import all_finite, global_norm
 class TrainState(NamedTuple):
     opt: LambState
     loss_scale: LossScaleState
+    # error-feedback residual for the compressed gradient exchange
+    # (grad_compression != "none"): each worker's OWN quantisation error
+    # carried into its next step's gradients.  The residual is inherently
+    # per-worker (local compression error), so leaves carry a leading
+    # ``world`` dim sharded over the DP axes -- a checkpoint then holds
+    # every worker's residual and exact-resume stays bit-identical
+    # (declaring it replicated would silently keep divergent per-device
+    # buffers under check_vma=False and checkpoint only device 0's).
+    # None when compression is off, so the checkpoint tree (PR 7
+    # manifest) is unchanged for existing runs.
+    err: Any = None
 
 
-def init_train_state(params, policy: Policy, tcfg: TrainConfig) -> TrainState:
+def init_train_state(params, policy: Policy, tcfg: TrainConfig,
+                     world: int = 1) -> TrainState:
     ls = make_loss_scale(policy).init()
-    return TrainState(lamb_init(params), ls)
+    err = None
+    if tcfg.grad_compression != "none":
+        err = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((world,) + tuple(p.shape), jnp.float32),
+            params)
+    return TrainState(lamb_init(params), ls, err)
 
 
 def _optimizer_update(grads, opt: LambState, tcfg: TrainConfig, *,
@@ -74,8 +91,16 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
                   tcfg: TrainConfig, policy: Policy,
                   grad_reduce: Optional[Callable] = None,
                   metric_reduce: Optional[Callable] = None,
-                  grad_constraint: Optional[Callable] = None):
-    """Shared step body.  ``grad_reduce``: None under GSPMD (implicit)."""
+                  grad_constraint: Optional[Callable] = None,
+                  grad_exchange: Optional[Callable] = None):
+    """Shared step body.  ``grad_reduce``: None under GSPMD (implicit).
+
+    ``grad_exchange``: the compressed exchange (DP mode only).  Called as
+    ``(unscaled_grads, err) -> (mean_grads, new_err, finite)``; it replaces
+    the reduce+unscale+finite sequence for gradients -- unscaling happens
+    *before* the exchange so the error-feedback residual lives in true
+    gradient units and survives AMP loss-scale changes between steps.
+    """
     loss_scale = make_loss_scale(policy)
     loss_fn = api.make_loss_fn(cfg, policy, moe_impl=tcfg.moe_impl,
                                remat=tcfg.remat)
@@ -101,15 +126,25 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
         scaled_loss, compute_params, batch, tcfg.accum_steps,
         grad_constraint=grad_constraint)
 
-    if grad_reduce is not None:
-        grads = grad_reduce(grads)
-        loss = grad_reduce(loss)
+    new_err = state.err
+    if grad_exchange is not None:
+        # compressed path: unscale locally first, then exchange compressed
+        # bytes with error feedback (the flag comes back globally reduced)
+        grads = loss_scale.unscale_grads(grads, state.loss_scale)
+        grads, new_err, finite = grad_exchange(grads, state.err)
+        if grad_reduce is not None:
+            loss = grad_reduce(loss)
+        loss = loss / state.loss_scale.scale
+    else:
+        if grad_reduce is not None:
+            grads = grad_reduce(grads)
+            loss = grad_reduce(loss)
+        grads = loss_scale.unscale_grads(grads, state.loss_scale)
+        loss = loss / state.loss_scale.scale
+        finite = all_finite(grads)
     if metric_reduce is not None:
         metrics = metric_reduce(metrics)
 
-    grads = loss_scale.unscale_grads(grads, state.loss_scale)
-    loss = loss / state.loss_scale.scale
-    finite = all_finite(grads)
     new_ls, _ = loss_scale.update(state.loss_scale, finite)
     grads, gnorm = _clip_grads(grads, tcfg.grad_clip)
     new_opt, lr = _optimizer_update(grads, state.opt, tcfg,
@@ -123,7 +158,7 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
     }
     for k, v in metrics.items():
         out_metrics[k] = v.astype(jnp.float32) if hasattr(v, "astype") else v
-    return TrainState(new_opt, new_ls), out_metrics
+    return TrainState(new_opt, new_ls, new_err), out_metrics
 
 
 # ---------------------------------------------------------------------------
@@ -167,6 +202,12 @@ def make_train_step_gspmd(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
     st_shard = state_shardings(param_specs, param_shapes, mesh, rules)
     b_struct = api.train_batch_struct(cfg, shape)
     b_shard = batch_shardings(cfg, b_struct, mesh, rules)
+
+    if tcfg.grad_compression != "none":
+        raise ValueError(
+            "grad_compression requires the explicit-collective pure-DP "
+            "shard_map mode (make_train_step_dp); GSPMD's implicit "
+            "reduces cannot carry compressed bytes")
 
     grad_constraint = None
     if tcfg.shard_grads:
@@ -229,14 +270,44 @@ def make_train_step_dp(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
             if hasattr(v, "dtype") and jnp.issubdtype(v.dtype, jnp.floating)
             else v, metrics)
 
+    grad_exchange = None
+    if tcfg.grad_compression != "none":
+        non_pod = tuple(a for a in all_axes if a != pod_axis)
+
+        def grad_exchange(grads, err):
+            # err leaves arrive as this worker's (1, *shape) slice of the
+            # world-stacked residual (sharded over the DP axes)
+            err_local = jax.tree_util.tree_map(lambda e: e[0], err)
+            red, new_err, fin = C.compressed_reduce_gradients(
+                grads, err_local, strategy=strategy,
+                mode=tcfg.grad_compression,
+                data_axes=non_pod, pod_axis=pod_axis,
+                bucket_bytes=tcfg.bucket_bytes)
+            red = jax.tree_util.tree_map(lambda g: g / world, red)
+            new_err = jax.tree_util.tree_map(lambda e: e[None], new_err)
+            return red, new_err, fin
+
     def step(state, batch):
         return train_step_fn(state, batch, cfg=cfg, tcfg=tcfg, policy=policy,
                              grad_reduce=reduce_fn,
-                             metric_reduce=metric_reduce)
+                             metric_reduce=metric_reduce,
+                             grad_exchange=grad_exchange)
 
     b_struct = api.train_batch_struct(cfg, shape)
     batch_spec = P(all_axes if len(all_axes) > 1 else all_axes[0])
     batch_specs = jax.tree_util.tree_map(lambda s: batch_spec, b_struct)
+
+    err_spec = P(all_axes if len(all_axes) > 1 else all_axes[0])
+
+    def state_specs(state):
+        # everything replicated except the error-feedback residual, whose
+        # leading world dim is sharded so each worker keeps (and the
+        # checkpoint records) its own buffer
+        return TrainState(
+            opt=jax.tree_util.tree_map(lambda _: P(), state.opt),
+            loss_scale=jax.tree_util.tree_map(lambda _: P(),
+                                              state.loss_scale),
+            err=jax.tree_util.tree_map(lambda _: err_spec, state.err))
 
     def sm(state, batch):
         # check_vma=False: the ppermute-ring / psum_scatter+all_gather
@@ -244,9 +315,8 @@ def make_train_step_dp(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
         # which the varying-axes type system cannot verify.
         fn = shard_map(
             step, mesh=mesh,
-            in_specs=(jax.tree_util.tree_map(lambda _: P(), state),
-                      batch_specs),
-            out_specs=(jax.tree_util.tree_map(lambda _: P(), state), P()),
+            in_specs=(state_specs(state), batch_specs),
+            out_specs=(state_specs(state), P()),
             check_vma=False,
         )
         return fn(state, batch)

@@ -198,6 +198,44 @@ def test_pure_dp_zero1_mode():
     assert "OK" in out
 
 
+def test_ring_and_hierarchical_edge_paths_vs_psum():
+    """The branchy paths the happy-path tests skip: ring's pad/unpad when
+    the leaf size is not a multiple of the ring (size % n != 0, including
+    size < n), and hierarchical's uneven-scatter fallback vs its even
+    psum_scatter fast path -- all checked against a plain psum oracle."""
+    out = run_multidevice("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.core.compat import make_mesh, shard_map
+        from repro.core.collectives import ring_all_reduce, hierarchical_psum
+        mesh = make_mesh((8,), ("d",))
+        # sizes: 40 divisible by 8 (no pad), 37 (pad 3), 5 (< ring size:
+        # every chunk is padding-dominated), 1 (scalar-ish leaf)
+        for size in (40, 37, 5, 1):
+            x = jnp.arange(8 * size, dtype=jnp.float32).reshape(8, size)
+            ref = np.tile(np.asarray(x).sum(0)[None], (8, 1))
+            got = jax.jit(shard_map(lambda v: ring_all_reduce(v, "d"),
+                                    mesh=mesh, in_specs=P("d", None),
+                                    out_specs=P("d", None)))(x)
+            np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-6,
+                                       err_msg=f"ring size={size}")
+        mesh2 = make_mesh((2, 4), ("pod", "d"))
+        # 36 % 4 == 0 -> psum_scatter fast path; 37 % 4 != 0 -> the
+        # two-stage psum fallback.  Both must equal the plain psum.
+        for size in (36, 37):
+            x = jnp.arange(8 * size, dtype=jnp.float32).reshape(8, size)
+            ref = np.tile(np.asarray(x).sum(0)[None], (8, 1))
+            got = jax.jit(shard_map(
+                lambda v: hierarchical_psum(v, "d", "pod"), mesh=mesh2,
+                in_specs=P(("pod", "d"), None),
+                out_specs=P(("pod", "d"), None), check_vma=False))(x)
+            np.testing.assert_allclose(np.asarray(got), ref, rtol=1e-6,
+                                       err_msg=f"hier size={size}")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_bert_dp_strategies_on_bigger_mesh_ring_multiaxis():
     """Ring all-reduce over a flattened 2-axis mesh (production bert_dryrun
     path) equals psum."""
