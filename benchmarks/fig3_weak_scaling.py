@@ -26,11 +26,47 @@ OVERLAP = 0.3
 COMPUTE_1 = PAPER["phase1_batch_per_gpu"] * PAPER["phase1_seq"] / \
     PAPER["t4_tokens_per_s"]          # seconds per micro-step per GPU
 GRAD = PAPER["grad_bytes_fp16"]
+# Fraction of a micro-step that is backward pass (fwd:bwd ~ 1:2): the
+# overlapped drain schedule (core/grad_accum.py) can hide the exchange
+# behind at most the LAST micro-batch's backward, so its hiding window is
+# BWD_FRAC * COMPUTE_1 regardless of accum_steps.
+BWD_FRAC = 2.0 / 3.0
 
 
-def eff_from(comm: float, compute: float) -> float:
-    exposed = max(0.0, comm - OVERLAP * compute)
+def eff_from(comm: float, compute: float,
+             overlap_window: float = None) -> float:
+    """Roofline efficiency: compute / (compute + exposed_comm).
+
+    ``overlap_window`` is the seconds of exchange time the SCHEDULE can
+    hide behind compute.  Until PR 10 this helper silently assumed one
+    fixed schedule: every caller got ``OVERLAP * compute`` (a 0.3
+    calibration of generic latency hiding), which models a partially-
+    overlapped exchange even for the serial schedule that actually runs
+    after the full backward -- an optimistic serial number.  That default
+    is kept for the legacy callers (paper-figure reproductions calibrated
+    against it), but schedule-aware callers should pass it explicitly:
+
+      * serial schedule:      overlap_window=0.0 (everything exposed);
+      * overlapped drain:     overlap_window=drain_overlap_window()
+                              (hidden behind the last micro-batch's
+                              backward, the DDP bucket-overlap window).
+    """
+    window = OVERLAP * compute if overlap_window is None else overlap_window
+    exposed = max(0.0, comm - window)
     return compute / (compute + exposed)
+
+
+def drain_overlap_window(compute_1: float = None) -> float:
+    """Seconds the overlapped drain schedule can hide: bwd(last micro-batch).
+
+    Buckets become ready progressively through the final backward pass and
+    their packed collectives are issued inside that region, so up to one
+    micro-batch's backward time of exchange is hidden -- more accumulation
+    steps do NOT widen this window (earlier micro-batches finish before
+    any exchange is issued; pipelining partial sums per micro-batch would
+    widen it but breaks bit-exactness and inflates wire volume x(A+1)/2).
+    """
+    return BWD_FRAC * (COMPUTE_1 if compute_1 is None else compute_1)
 
 
 def intra_node(n_gpus: int, accum: int = 1) -> float:

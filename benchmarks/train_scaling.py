@@ -12,13 +12,21 @@ trick as tests/conftest.run_multidevice); each worker times real train
 steps for every (collective strategy x grad compression) cell and records
 a short loss trajectory per cell.
 
-Reported per cell:
+Reported per cell (cells suffixed ``/ov`` run the overlapped drain
+schedule, ``TrainConfig.overlap_exchange``; same wire bytes, different
+placement):
 
 * ``step_ms``            -- median measured wall time per optimizer step;
+* ``compute_ms`` / ``exchange_ms`` -- the step split against a no-exchange
+                            twin (collective_strategy="local") timed once
+                            per worker: what the exchange actually costs on
+                            this harness (the twin is timed on the flat
+                            data mesh, so hierarchical cells' split is
+                            approximate);
 * ``exchanged_mb``       -- per-worker gradient wire bytes for one step
                             (core/collectives.exchange_bytes_per_step: the
                             2(n-1)/n ring volume at the wire dtype, int8
-                            incl. per-bucket scales);
+                            incl. per-bucket scales; schedule-independent);
 * ``final_loss`` / ``loss_dev`` -- trajectory fidelity vs the same
                             strategy's uncompressed run (error feedback on);
 * ``achieved_eff``       -- measured weak-scaling efficiency
@@ -26,14 +34,18 @@ Reported per cell:
                             per-device batch;
 * ``model_eff``          -- the fig3 analytic model evaluated at our
                             MEASURED single-device compute time and this
-                            cell's wire bytes on the paper's 10 Gb/s link:
-                            what this compression would buy on the paper's
-                            cluster (host-device "links" are memcpys, so
-                            achieved_eff upper-bounds a real network).
+                            cell's wire bytes on the paper's 10 Gb/s link,
+                            with the SCHEDULE's overlap window (serial
+                            cells expose all comm; /ov cells hide up to the
+                            drain window) -- what this cell would buy on
+                            the paper's cluster.
 
 The derived block carries the acceptance numbers: int8 moves >=3x fewer
-gradient bytes than fp32 at a loss trajectory within tolerance.  Merge-
-written to the ``train_scaling`` section of BENCH_train.json.
+gradient bytes than fp32 at a loss trajectory within tolerance, and the
+``train_overlap`` section (also merge-written here) compares overlapped vs
+serial at the top device count: measured speedup with BIT-EXACT losses for
+the uncompressed psum pair, plus the paper-scale modeled efficiency of the
+overlapped schedule vs PR 9's serial baseline.
 """
 from __future__ import annotations
 
@@ -83,14 +95,34 @@ def worker(args) -> None:
                for i in range(args.steps)]
 
     if n == args.max_devices:
-        cells = [(s, c) for s in STRATEGIES for c in COMPRESSIONS]
+        cells = [(s, c, False) for s in STRATEGIES for c in COMPRESSIONS]
+        # overlapped drain cells: every strategy uncompressed + the psum
+        # compressed pair (the schedule must compose with PR 9's wire)
+        cells += [(s, "none", True) for s in STRATEGIES]
+        cells += [("psum", "fp16", True), ("psum", "int8", True)]
     else:  # scaling curve across device counts: one strategy, every wire
-        cells = [("psum", c) for c in COMPRESSIONS]
+        cells = [("psum", c, False) for c in COMPRESSIONS]
+        cells += [("psum", "none", True)]
     if args.quick:
-        cells = [(s, c) for s, c in cells if s in ("psum", "bucketed")]
+        cells = [(s, c, ov) for s, c, ov in cells
+                 if s in ("psum", "bucketed")]
+
+    iters = 3 if args.quick else 6
+    pol = make_policy("f32")
+
+    # no-exchange compute twin (collective_strategy="local"): the baseline
+    # that splits every cell's step into compute_ms vs exchange_ms
+    tcfg_c = TrainConfig(precision="f32", accum_steps=args.accum,
+                         collective_strategy="local", total_steps=100,
+                         warmup_steps=2, bucket_bytes=args.bucket_bytes)
+    fn_c, _ = make_train_step_dp(cfg, tcfg_c, make_mesh((n,), ("data",)),
+                                 shape)
+    compute_ms = time_train_steps(
+        fn_c, init_train_state(params, pol, tcfg_c, world=n), batches[0],
+        iters=iters, warmup=2) * 1e3
 
     results = {}
-    for strategy, comp in cells:
+    for strategy, comp, overlap in cells:
         if strategy == "hierarchical" and n >= 2:
             mesh = make_mesh((2, n // 2), ("pod", "data"))
             pod = 2
@@ -100,13 +132,13 @@ def worker(args) -> None:
         tcfg = TrainConfig(precision="f32", accum_steps=args.accum,
                            collective_strategy=strategy,
                            grad_compression=comp, total_steps=100,
-                           warmup_steps=2, bucket_bytes=args.bucket_bytes)
+                           warmup_steps=2, bucket_bytes=args.bucket_bytes,
+                           overlap_exchange=overlap)
         step_fn, _ = make_train_step_dp(cfg, tcfg, mesh, shape)
-        pol = make_policy("f32")
 
         state = init_train_state(params, pol, tcfg, world=n)
         sec = time_train_steps(step_fn, state, batches[0],
-                               iters=3 if args.quick else 6, warmup=2)
+                               iters=iters, warmup=2)
 
         state = init_train_state(params, pol, tcfg, world=n)
         losses = []
@@ -116,15 +148,19 @@ def worker(args) -> None:
         wire = exchange_bytes_per_step(
             n_params, strategy=strategy, compression=comp, world=n, pod=pod,
             bucket_bytes=args.bucket_bytes)
-        results[f"{strategy}/{comp}"] = {
+        key = f"{strategy}/{comp}" + ("/ov" if overlap else "")
+        results[key] = {
             "step_ms": round(sec * 1e3, 2),
+            "compute_ms": round(compute_ms, 2),
+            "exchange_ms": round(max(0.0, sec * 1e3 - compute_ms), 2),
             "exchanged_mb": round(wire / 2 ** 20, 4),
             "final_loss": round(losses[-1], 6),
             "losses": [round(l, 6) for l in losses],
             "finite": bool(np.all(np.isfinite(losses))),
         }
     print("RESULT_JSON:" + json.dumps(
-        {"devices": n, "n_params": int(n_params), "cells": results}))
+        {"devices": n, "n_params": int(n_params),
+         "compute_ms": round(compute_ms, 2), "cells": results}))
 
 
 # ---------------------------------------------------------------------------
@@ -181,12 +217,14 @@ def main(argv=()):
     try:
         from benchmarks.serve_paged import write_section
         from benchmarks.common import PAPER
-        from benchmarks.fig3_weak_scaling import OVERLAP, eff_from
+        from benchmarks.fig3_weak_scaling import (OVERLAP, drain_overlap_window,
+                                                  eff_from)
     except ImportError:
         sys.path.insert(0, str(REPO))
         from benchmarks.serve_paged import write_section
         from benchmarks.common import PAPER
-        from benchmarks.fig3_weak_scaling import OVERLAP, eff_from
+        from benchmarks.fig3_weak_scaling import (OVERLAP, drain_overlap_window,
+                                                  eff_from)
 
     args.device_list = [int(x) for x in args.device_counts.split(",")]
     scaling = {}
@@ -204,12 +242,27 @@ def main(argv=()):
             if base_ms:
                 r["achieved_eff"] = round(base_ms / r["step_ms"], 3)
             # fig3's roofline fed with our measured compute and this cell's
-            # wire bytes on the paper's 10 Gb/s inter-node link
+            # wire bytes on the paper's 10 Gb/s inter-node link, with the
+            # SCHEDULE's window: serial exposes all comm, /ov hides up to
+            # one micro-batch's backward
             comm_s = r["exchanged_mb"] * 2 ** 20 / PAPER["network_bps"]
-            r["model_eff"] = round(eff_from(comm_s, compute_s), 3) \
+            window = drain_overlap_window(compute_s / args.accum) \
+                if cell.endswith("/ov") else 0.0
+            r["model_eff"] = round(
+                eff_from(comm_s, compute_s, overlap_window=window), 3) \
                 if compute_s else None
 
+    # measured overlap fraction at the top device count: how much of the
+    # serial cell's exchange time the /ov twin hid
     big = scaling[nmax]["cells"]
+    for cell, r in big.items():
+        if not cell.endswith("/ov"):
+            continue
+        serial = big.get(cell[:-len("/ov")])
+        if serial and serial["exchange_ms"] > 0:
+            r["overlap_frac"] = round(max(0.0, min(1.0,
+                1.0 - r["exchange_ms"] / serial["exchange_ms"])), 3)
+
     derived = {}
     for strat in sorted({c.split("/")[0] for c in big}):
         none = big.get(f"{strat}/none")
@@ -235,17 +288,32 @@ def main(argv=()):
         derived["all_finite"] = all(c["finite"] for c in big.values())
 
     # fig3 at paper scale: BERT-large gradients on the 32-node 10 Gb/s
-    # cluster, with the wire dtype as the new lever (the smoke model above
-    # is compute-bound on that link, so the lever only shows at full size)
+    # cluster, with the wire dtype AND the schedule as levers (the smoke
+    # model above is compute-bound on that link, so they only show at full
+    # size).  "serial" exposes all comm (honest serial schedule),
+    # "overlapped" hides up to the drain window, "pr9_legacy_window" is the
+    # fixed 0.3*compute window every PR<=9 number silently assumed.
     from benchmarks.fig3_weak_scaling import COMPUTE_1
     from repro.core.collectives import exchange_bytes_per_step
     paper_params = int(PAPER["bert_large_params"])
-    derived["paper_scale_model_eff"] = {
-        comp: round(eff_from(
-            exchange_bytes_per_step(paper_params, strategy="ring",
-                                    compression=comp, world=PAPER["nodes"])
-            / PAPER["network_bps"], 4 * COMPUTE_1), 3)
-        for comp in COMPRESSIONS}
+    paper_compute = 4 * COMPUTE_1  # accum=4, as in fig6's rescue
+    paper_comm = {
+        comp: exchange_bytes_per_step(paper_params, strategy="ring",
+                                      compression=comp, world=PAPER["nodes"])
+        / PAPER["network_bps"] for comp in COMPRESSIONS}
+    pse = {
+        "serial": {c: round(eff_from(s, paper_compute, overlap_window=0.0), 3)
+                   for c, s in paper_comm.items()},
+        "overlapped": {c: round(eff_from(
+            s, paper_compute, overlap_window=drain_overlap_window()), 3)
+            for c, s in paper_comm.items()},
+        "pr9_legacy_window": {c: round(eff_from(s, paper_compute), 3)
+                              for c, s in paper_comm.items()},
+    }
+    pse["best"] = max(pse["overlapped"].values())
+    pse["improves_pr9_fp32_baseline"] = bool(
+        pse["best"] > pse["pr9_legacy_window"]["none"])
+    derived["paper_scale_model_eff"] = pse
 
     for n in sorted(scaling):
         for cell in sorted(scaling[n]["cells"]):
@@ -261,10 +329,54 @@ def main(argv=()):
               f" | int8 loss dev {derived['int8_loss_dev']}"
               f" | max loss dev {derived['max_loss_dev']}"
               f" | all finite {derived['all_finite']}")
-        print("paper-scale (340M grads, 32 nodes @10Gb/s, accum 4) "
-              "model eff: " + " ".join(
-                  f"{k}={v}" for k, v in
-                  derived["paper_scale_model_eff"].items()))
+        for sched in ("serial", "overlapped", "pr9_legacy_window"):
+            print(f"paper-scale (340M grads, 32 nodes @10Gb/s, accum 4) "
+                  f"{sched} model eff: " + " ".join(
+                      f"{k}={v}" for k, v in
+                      derived["paper_scale_model_eff"][sched].items()))
+
+    # --- train_overlap: overlapped vs serial compare at the top count ---
+    overlap_sec = None
+    if "psum/none/ov" in big and "psum/none" in big:
+        pairs = {}
+        for cell, r in big.items():
+            if not cell.endswith("/ov"):
+                continue
+            serial = big.get(cell[:-len("/ov")])
+            if serial is None:
+                continue
+            pairs[cell[:-len("/ov")]] = {
+                "serial_step_ms": serial["step_ms"],
+                "overlap_step_ms": r["step_ms"],
+                "speedup": round(serial["step_ms"] /
+                                 max(r["step_ms"], 1e-9), 3),
+                "serial_exchange_ms": serial["exchange_ms"],
+                "overlap_exchange_ms": r["exchange_ms"],
+                "overlap_frac": r.get("overlap_frac"),
+                "bit_exact": bool(r["losses"] == serial["losses"]),
+            }
+        ovd = {
+            "uncompressed_speedup": pairs["psum/none"]["speedup"],
+            "uncompressed_bit_exact": pairs["psum/none"]["bit_exact"],
+            "all_pairs_bit_exact": all(p["bit_exact"]
+                                       for p in pairs.values()),
+            "overlap_reduces_step_time": bool(
+                pairs["psum/none"]["speedup"] > 1.0),
+            "paper_scale_model_eff": derived["paper_scale_model_eff"],
+        }
+        overlap_sec = {
+            "bench": "train_overlap",
+            "config": {"devices": nmax, "accum": args.accum,
+                       "bucket_bytes": args.bucket_bytes,
+                       "per_batch": args.per_batch, "seq": args.seq},
+            "compute_ms": scaling[nmax].get("compute_ms"),
+            "pairs": pairs,
+            "derived": ovd,
+        }
+        for name, p in sorted(pairs.items()):
+            print(f"overlap {name:14s} {p['serial_step_ms']:.2f}ms -> "
+                  f"{p['overlap_step_ms']:.2f}ms (x{p['speedup']}) "
+                  f"bit_exact={p['bit_exact']}")
 
     payload = {
         "bench": "train_scaling",
@@ -280,6 +392,9 @@ def main(argv=()):
     }
     write_section(args.out, "train_scaling", payload)
     print(f"wrote {args.out} [train_scaling]")
+    if overlap_sec is not None:
+        write_section(args.out, "train_overlap", overlap_sec)
+        print(f"wrote {args.out} [train_overlap]")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,17 @@ SCHEMAS = {
                     "int8_loss_dev", "max_loss_dev", "all_finite",
                     "paper_scale_model_eff"},
     },
+    "train_overlap": {
+        "keys": {"bench", "config", "compute_ms", "pairs", "derived"},
+        "derived": {"uncompressed_speedup", "uncompressed_bit_exact",
+                    "all_pairs_bit_exact", "overlap_reduces_step_time",
+                    "paper_scale_model_eff"},
+    },
+    "train_autotune": {
+        "keys": {"bench", "config", "best", "trials", "derived"},
+        "derived": {"best_tokens_per_s", "speedup_vs_default", "n_trials",
+                    "n_failed"},
+    },
 }
 
 

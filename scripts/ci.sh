@@ -11,6 +11,9 @@
 #   bash scripts/ci.sh train-dp   # 4-device DP train matrix: every collective
 #                                 # strategy bit-matches the psum loss, plus a
 #                                 # compressed (int8 + error feedback) run
+#   bash scripts/ci.sh train-overlap # 4-device overlapped drain schedule:
+#                                 # bit-matches serial psum at accum 1/2/4,
+#                                 # then an autotuner smoke on a tiny grid
 #
 # The serve smoke forces 2 host devices so scheduler / sharding regressions
 # in the decode path surface without accelerators.  The paged smoke runs the
@@ -32,9 +35,15 @@
 # then one int8-compressed exchange run (error feedback on) asserting the
 # losses stay finite and land within tolerance of the uncompressed
 # trajectory.  Loss logs land in ci-artifacts/ for upload.
+# The train-overlap step forces 4 host devices and asserts the overlapped
+# drain schedule (TrainConfig.overlap_exchange) produces BIT-IDENTICAL loss
+# trajectories to the serial psum reference across accum_steps 1/2/4 and an
+# uneven bucket size, then runs the measured comm autotuner
+# (repro.tune.autotune) over a tiny grid as a smoke of the search loop.
 # The bench-check step validates every BENCH_*.json section against the
-# committed schema (scripts/bench_check.py) -- warnings only, never a
-# failure, so bench drift is visible without blocking merges.
+# committed schema (scripts/bench_check.py) with --strict: a renamed metric
+# or dropped derived block fails the build -- update SCHEMAS in the same PR
+# that changes a bench's payload shape.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -235,9 +244,71 @@ print("train-dp matrix OK")
 EOF
 fi
 
+if [[ "$step" == "all" || "$step" == "train-overlap" ]]; then
+    echo "=== train-overlap: 4 devices, drain schedule bit-matches serial psum ==="
+    XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=4" \
+    python - <<'EOF'
+import json
+import jax
+import numpy as np
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import InputShape, TrainConfig
+from repro.core.amp import make_policy
+from repro.core.compat import make_mesh
+from repro.models import api
+from repro.train.train_step import init_train_state, make_train_step_dp
+
+assert len(jax.devices()) == 4, jax.devices()
+cfg = smoke_variant(get_config("bert-large"), d_model=64)
+shape = InputShape("ci", 32, 16, "train")
+params, _ = api.init_params(jax.random.PRNGKey(0), cfg)
+batches = [api.make_synth_batch(jax.random.PRNGKey(i), cfg, shape)
+           for i in range(5)]
+
+def run(accum, overlap, bucket_bytes=1 << 16, comp="none"):
+    tcfg = TrainConfig(precision="f32", accum_steps=accum,
+                       collective_strategy="psum", grad_compression=comp,
+                       overlap_exchange=overlap, total_steps=50,
+                       warmup_steps=2, bucket_bytes=bucket_bytes)
+    step, _ = make_train_step_dp(cfg, tcfg, make_mesh((4,), ("data",)), shape)
+    state = init_train_state(params, make_policy("f32"), tcfg, world=4)
+    losses = []
+    for b in batches:
+        state, m = step(state, b)
+        losses.append(float(np.asarray(m["loss"])))
+    return losses
+
+log = {}
+for accum in (1, 2, 4):
+    ref = run(accum, overlap=False)
+    got = run(accum, overlap=True)
+    log[f"accum{accum}"] = {"serial": ref, "overlap": got}
+    assert got == ref, (
+        f"accum={accum}: overlapped diverged from serial psum:\n{got}\n{ref}")
+    print(f"accum={accum}: overlapped == serial psum "
+          f"({len(ref)} steps bit-identical)")
+# uneven bucket boundary (prime size: leaves straddle buckets)
+ref = run(2, overlap=False)
+got = run(2, overlap=True, bucket_bytes=50021)
+assert got == ref, f"uneven buckets diverged:\n{got}\n{ref}"
+print("uneven bucket boundaries: bit-identical")
+with open("ci-artifacts/train_overlap_losses.json", "w") as f:
+    json.dump(log, f, indent=2)
+print("train-overlap compare OK")
+EOF
+    echo "=== train-overlap: autotuner smoke (tiny grid) ==="
+    python -m repro.tune.autotune --devices 4 --d-model 32 \
+        --iters0 1 --max-rounds 2 --out ci-artifacts/BENCH_autotune_smoke.json \
+        --space-json '{"bucket_bytes": [65536], "accum_steps": [1, 2],
+                       "strategy": ["psum"], "compression": ["none"],
+                       "overlap": [false, true]}'
+    python scripts/bench_check.py --strict \
+        ci-artifacts/BENCH_autotune_smoke.json
+fi
+
 if [[ "$step" == "all" || "$step" == "bench-check" ]]; then
-    echo "=== bench schema guard (non-blocking on drift) ==="
-    python scripts/bench_check.py
+    echo "=== bench schema guard (strict) ==="
+    python scripts/bench_check.py --strict
 fi
 
 echo "CI OK"

@@ -278,6 +278,13 @@ class TrainConfig:
     # (fp16) or 1-byte (int8, per-bucket scale) words, with the quantisation
     # residual carried in TrainState.err (error feedback).  DP mode only.
     grad_compression: str = "none"     # none | fp16 | int8
+    # Overlapped bucketed exchange (core/grad_accum.py drain schedule): the
+    # last micro-batch is peeled out of the accumulation scan and the
+    # per-~bucket_bytes packed collectives are issued inside that flat
+    # region, so XLA's scheduler can hide them behind the final backward
+    # while the local summation order (and hence every loss bit) stays
+    # identical to the serial schedule.  DP shard_map mode only.
+    overlap_exchange: bool = False
     optimizer: str = "lamb"            # lamb | adamw
     learning_rate: float = 1e-4        # paper Table 6
     warmup_steps: int = 100

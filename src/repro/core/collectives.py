@@ -21,6 +21,14 @@ them; under XLA the analogous lever is issuing one collective per bucket
 (instead of one giant fused all-reduce) so the latency-hiding scheduler can
 pipeline collectives with the remaining backward compute.
 
+Plus ``overlapped_reduce_tree``: the packed form of that idea, used by the
+``TrainConfig.overlap_exchange`` drain schedule (see core/grad_accum.py for
+the bucket lifecycle).  Each ~``bucket_bytes`` bucket is exchanged as ONE
+concatenated flat buffer issued inside the last micro-batch's flat backward
+region: elementwise identical to per-leaf psum (bit-exact losses), free for
+XLA to overlap with the remaining backward, and O(n_buckets) collective
+dispatches instead of O(n_leaves).
+
 Compressed gradient exchange (``TrainConfig.grad_compression``, paper §4.4's
 fp16 wire + "How to Train BERT with an Academic Budget" / 1-bit-Adam-style
 error feedback):
@@ -201,6 +209,64 @@ def bucketed_psum_tree(tree: Any, axis_names, *,
 # Strategy dispatch used by the train step.
 # ---------------------------------------------------------------------------
 
+def overlapped_reduce_tree(tree: Any, *, strategy: str,
+                           data_axes: Sequence[str],
+                           pod_axis: Optional[str] = None,
+                           bucket_bytes: int = 25 * 2 ** 20,
+                           world: int = 1,
+                           pre_scale: Optional[float] = None) -> Any:
+    """Packed per-bucket exchange for the overlapped drain schedule.
+
+    Each ``bucket_leaves`` bucket is concatenated into ONE flat buffer,
+    optionally pre-scaled (the 1/accum_steps mean, folded in here so it
+    runs on ~n_buckets buffers instead of n_leaves), reduced with the
+    selected wire strategy, divided by ``world`` (the psum -> mean
+    contract of the serial ``reduce_fn``), and split back.
+
+    Two properties the drain schedule rides on:
+
+    * **bit-exact vs per-leaf psum**: an all-reduce is elementwise and
+      layout-independent, so psum of a concatenated bucket produces the
+      exact bits of per-leaf psums; the pre/post scalings are elementwise
+      in the same order the serial path applies them.  (The ring/
+      hierarchical wire forms re-chunk the flat buffer, which can rotate
+      the per-element reduction order -- numerically equivalent, and
+      observed bit-equal on the CI harness, but only ``psum``/``bucketed``
+      carry the by-construction guarantee.)
+    * **schedulable**: each bucket's collective depends only on its own
+      leaves, so inside the drain region XLA may issue it while the
+      remaining backward compute runs; and the packed form costs
+      O(n_buckets) collective dispatches instead of O(n_leaves) -- on the
+      forced-host-device CI mesh, where per-op rendezvous dominates, this
+      is the measured step-time win.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    axes = tuple(data_axes) + ((pod_axis,) if pod_axis else ())
+    out = [None] * len(leaves)
+    for bucket in bucket_leaves(tree, bucket_bytes):
+        flat = leaves[bucket[0]].reshape(-1) if len(bucket) == 1 else \
+            jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
+        if pre_scale is not None:
+            flat = flat * pre_scale
+        if strategy == "ring":
+            name = axes[0] if len(axes) == 1 else axes
+            red = ring_all_reduce(flat, name)
+        elif strategy == "hierarchical":
+            assert pod_axis is not None, "hierarchical needs a pod axis"
+            fast = tuple(a for a in axes if a != pod_axis)
+            red = hierarchical_psum(flat, fast, pod_axis)
+        else:  # psum and bucketed share the packed form
+            red = jax.lax.psum(flat, axes)
+        if world > 1:
+            red = red / world
+        off = 0
+        for i in bucket:
+            sz = leaves[i].size
+            out[i] = red[off:off + sz].reshape(leaves[i].shape)
+            off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def reduce_gradients(grads: Any, *, strategy: str, data_axes: Sequence[str],
                      pod_axis: Optional[str] = None,
                      bucket_bytes: int = 25 * 2 ** 20) -> Any:
@@ -362,6 +428,14 @@ def exchange_bytes_per_step(n_params: int, *, strategy: str,
     the 1/n_fast shard across pods; int8 adds two fp32 scales per bucket per
     hop-direction.  ``world`` is the total number of workers (including the
     ``pod`` factor for hierarchical).
+
+    The volume is SCHEDULE-independent: the overlapped drain schedule
+    (``overlapped_reduce_tree``) moves exactly these bytes, just hidden
+    behind the last micro-batch's backward -- whether they land on the step
+    critical path is the roofline model's ``overlap_window`` term
+    (benchmarks/fig3_weak_scaling.eff_from), not a byte count.  (A schedule
+    that instead exchanged per-micro-batch partial sums would inflate this
+    by x(A+1)/2 -- one reason the drain schedule is the right overlap.)
     """
     if world <= 1:
         return 0.0

@@ -1,4 +1,4 @@
-"""Gradient accumulation (paper §4.4, Fig 5).
+"""Gradient accumulation (paper §4.4, Fig 5) + the overlapped drain schedule.
 
 The paper's network-bound cluster balances comm vs compute by summing
 gradients locally over ``accum_steps`` micro-batches and exchanging them
@@ -7,18 +7,49 @@ once per global step.  Here the micro-batch loop is a ``lax.scan``:
     grads = (1/A) * sum_a grad(loss(params, micro_a))
 
 Accumulation is done in fp32 regardless of the compute policy (this is what
-APEX/DDP do and is required for fp16 to be usable at all).  The collective
-fires once, *after* the scan -- the comm:compute ratio drops by A exactly as
-in the paper's Fig 5 timeline.
+APEX/DDP do and is required for fp16 to be usable at all).
+
+**Serial schedule** (``exchange=None``): the collective fires once, *after*
+the scan -- the comm:compute ratio drops by A exactly as in the paper's
+Fig 5 timeline, but the whole exchange sits exposed on the critical path.
+
+**Overlapped drain schedule** (``exchange`` set, ``TrainConfig.
+overlap_exchange``): the LAST micro-batch is peeled out of the scan into a
+flat (non-scan) region and ``exchange`` is applied there, so the per-bucket
+collectives it issues (``core/collectives.overlapped_reduce_tree``) sit in
+the same flat region as the final backward pass.  Bucket lifecycle:
+
+  1. micro-batches ``0 .. A-2`` accumulate locally (scan; no collectives);
+  2. the drain step runs micro-batch ``A-1``'s forward/backward *flat*;
+     each gradient bucket's exchange depends only on that bucket's leaves,
+     which reverse-mode autodiff produces progressively through the
+     backward pass -- XLA's latency-hiding scheduler is free to issue
+     bucket b's packed all-reduce while the backward for buckets b-1..0 is
+     still running (DDP's ``no_sync``-until-last-micro-batch timeline);
+  3. any bucket still in flight is drained before the optimizer update
+     consumes the reduced tree (a data dependency, not a barrier op).
+
+Bit-exactness by construction: the local summation order is unchanged
+(``((g_0+g_1)+...)+g_{A-1}`` whether the last add happens inside the scan
+or in the flat drain region), and a packed (concatenated-bucket)
+all-reduce is elementwise identical to a per-leaf all-reduce.  Schedules
+that instead pipeline *partial* sums per micro-batch (``sum_k psum(g_k)``)
+change the fp summation tree -- measured on the real model, ~40% of
+gradient elements differ in the last bit -- and move ``(A+1)/2`` x more
+wire bytes; this drain schedule does neither.
+
+Interaction with AMP skip: the exchange hook sees loss-*scaled* local sums
+(uncompressed) or unscales before compressing (compressed path, so the
+error-feedback residual lives in true gradient units); a non-finite local
+gradient propagates through the packed reduce exactly as it does through
+the serial per-leaf reduce, so the global skip decision is unchanged.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-
-from repro.utils import tree_zeros_like
 
 
 def split_microbatches(batch: Any, accum_steps: int) -> Any:
@@ -39,19 +70,27 @@ def accumulate_gradients(
     *,
     has_aux: bool = True,
     grad_constraint: Callable[[Any], Any] = None,
+    exchange: Optional[Callable[[Any, Optional[float]], Any]] = None,
 ) -> Tuple[jax.Array, Any, Any]:
     """Run ``grad(loss_fn)`` over ``accum_steps`` micro-batches via lax.scan.
 
     ``loss_fn(params, microbatch) -> (loss, aux)``.
     ``grad_constraint``: optional sharding constraint applied to the grad
     accumulator each iteration (ZeRO-2 reduce-scatter inside the loop).
-    Returns (mean_loss, mean_grads_fp32, last_aux).
+    ``exchange``: optional overlapped-drain hook, called as
+    ``exchange(local_grad_sum, inv_accum)`` inside the flat last-micro-batch
+    region (``inv_accum`` is ``1/A``, or None at A=1 where the serial path
+    applies no mean either); its return value is passed through opaquely as
+    the grads result, so compressed hooks can return ``(red, err, finite)``.
+    Returns (mean_loss, grads_or_exchange_result, last_aux).
     """
     cons = grad_constraint or (lambda g: g)
     if accum_steps == 1:
         (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         grads = cons(jax.tree_util.tree_map(
             lambda g: g.astype(jnp.float32), grads))
+        if exchange is not None:
+            return loss, exchange(grads, None), aux
         return loss, grads, aux
 
     micro = split_microbatches(batch, accum_steps)
@@ -61,7 +100,6 @@ def accumulate_gradients(
     # device-variance identical to the loop body's outputs (required when
     # the whole step runs inside shard_map, e.g. the paper-faithful DP mode).
     mb0 = jax.tree_util.tree_map(lambda x: x[0], micro)
-    rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
     (loss0, aux0), grads_raw = grad_fn(params, mb0)
     grads0 = cons(jax.tree_util.tree_map(
         lambda g: g.astype(jnp.float32), grads_raw))
@@ -73,9 +111,28 @@ def accumulate_gradients(
             lambda a, g: a + g.astype(jnp.float32), grads_acc, grads))
         return (loss_acc + loss.astype(jnp.float32), grads_acc), aux
 
-    (loss_sum, grads_sum), auxes = jax.lax.scan(
-        body, (loss0.astype(jnp.float32), grads0), rest)
     inv = 1.0 / accum_steps
-    grads = jax.tree_util.tree_map(lambda g: g * inv, grads_sum)
-    aux = jax.tree_util.tree_map(lambda a: a[-1], auxes)
-    return loss_sum * inv, grads, aux
+    if exchange is None:
+        # serial schedule: scan every remaining micro-batch, exchange later
+        rest = jax.tree_util.tree_map(lambda x: x[1:], micro)
+        (loss_sum, grads_sum), auxes = jax.lax.scan(
+            body, (loss0.astype(jnp.float32), grads0), rest)
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads_sum)
+        aux = jax.tree_util.tree_map(lambda a: a[-1], auxes)
+        return loss_sum * inv, grads, aux
+
+    # Overlapped drain schedule: scan micro-batches 1..A-2, run the LAST
+    # one flat so the exchange's per-bucket collectives share a schedulable
+    # region with its backward pass.  The accumulation order -- and hence
+    # every bit of the result -- matches the serial scan exactly.
+    loss_acc, grads_acc = loss0.astype(jnp.float32), grads0
+    if accum_steps > 2:
+        middle = jax.tree_util.tree_map(lambda x: x[1:-1], micro)
+        (loss_acc, grads_acc), _ = jax.lax.scan(
+            body, (loss_acc, grads_acc), middle)
+    mb_last = jax.tree_util.tree_map(lambda x: x[-1], micro)
+    (loss_last, aux), grads_raw = grad_fn(params, mb_last)
+    grads_sum = cons(jax.tree_util.tree_map(
+        lambda a, g: a + g.astype(jnp.float32), grads_acc, grads_raw))
+    loss_sum = loss_acc + loss_last.astype(jnp.float32)
+    return loss_sum * inv, exchange(grads_sum, inv), aux

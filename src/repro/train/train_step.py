@@ -92,7 +92,8 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
                   grad_reduce: Optional[Callable] = None,
                   metric_reduce: Optional[Callable] = None,
                   grad_constraint: Optional[Callable] = None,
-                  grad_exchange: Optional[Callable] = None):
+                  grad_exchange: Optional[Callable] = None,
+                  overlap_reduce: Optional[Callable] = None):
     """Shared step body.  ``grad_reduce``: None under GSPMD (implicit).
 
     ``grad_exchange``: the compressed exchange (DP mode only).  Called as
@@ -100,6 +101,16 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
     the reduce+unscale+finite sequence for gradients -- unscaling happens
     *before* the exchange so the error-feedback residual lives in true
     gradient units and survives AMP loss-scale changes between steps.
+
+    ``overlap_reduce``: the uncompressed overlapped drain exchange (DP mode,
+    ``tcfg.overlap_exchange``).  Called as ``(local_grad_sum, inv_accum) ->
+    mean_grads`` INSIDE accumulate_gradients' flat last-micro-batch region
+    (core/collectives.overlapped_reduce_tree); grads come back already
+    reduced and averaged, still in loss-scaled units, so the unscale ->
+    finite sequence below matches the serial path bit for bit.  When
+    ``tcfg.overlap_exchange`` is set with compression on, the compressed
+    ``grad_exchange`` itself is moved into the drain region instead (same
+    ops as the serial compressed path, so losses stay bit-identical).
     """
     loss_scale = make_loss_scale(policy)
     loss_fn = api.make_loss_fn(cfg, policy, moe_impl=tcfg.moe_impl,
@@ -122,12 +133,40 @@ def train_step_fn(state: TrainState, batch, *, cfg: ModelConfig,
         loss, metrics = loss_fn(p, b)
         return loss_scale.scale_loss(loss, state.loss_scale), metrics
 
+    overlap = tcfg.overlap_exchange and (
+        overlap_reduce is not None or grad_exchange is not None)
+    exchange_hook = None
+    if overlap and grad_exchange is not None:
+        def exchange_hook(grad_sum, inv):
+            # same op sequence as the serial compressed path (mean ->
+            # unscale -> compressed exchange), just issued in the drain
+            # region -- compressed overlap losses are bit-identical too
+            g = grad_sum if inv is None else jax.tree_util.tree_map(
+                lambda v: v * inv, grad_sum)
+            g = loss_scale.unscale_grads(g, state.loss_scale)
+            return grad_exchange(g, state.err)
+    elif overlap:
+        exchange_hook = overlap_reduce
+
     loss, grads, metrics = accumulate_gradients(
         scaled_loss, compute_params, batch, tcfg.accum_steps,
-        grad_constraint=grad_constraint)
+        grad_constraint=grad_constraint, exchange=exchange_hook)
 
     new_err = state.err
-    if grad_exchange is not None:
+    if overlap and grad_exchange is not None:
+        grads, new_err, finite = grads
+        if grad_reduce is not None:
+            loss = grad_reduce(loss)
+        loss = loss / state.loss_scale.scale
+    elif overlap:
+        # grads arrive reduced+averaged (loss-scaled); finish exactly as
+        # the serial uncompressed path does after its reduce
+        if grad_reduce is not None:
+            loss = grad_reduce(loss)
+        grads = loss_scale.unscale_grads(grads, state.loss_scale)
+        loss = loss / state.loss_scale.scale
+        finite = all_finite(grads)
+    elif grad_exchange is not None:
         # compressed path: unscale locally first, then exchange compressed
         # bytes with error feedback (the flag comes back globally reduced)
         grads = loss_scale.unscale_grads(grads, state.loss_scale)
@@ -208,6 +247,11 @@ def make_train_step_gspmd(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
             "grad_compression requires the explicit-collective pure-DP "
             "shard_map mode (make_train_step_dp); GSPMD's implicit "
             "reduces cannot carry compressed bytes")
+    if tcfg.overlap_exchange:
+        raise ValueError(
+            "overlap_exchange requires the explicit-collective pure-DP "
+            "shard_map mode (make_train_step_dp); GSPMD owns its own "
+            "reduce schedule and cannot take the drain-region collectives")
 
     grad_constraint = None
     if tcfg.shard_grads:
@@ -249,7 +293,12 @@ def make_train_step_dp(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
     strategy = tcfg.collective_strategy
 
     def reduce_fn(tree):
-        if strategy == "hierarchical" and pod_axis:
+        if strategy == "local":
+            # calibration-only: NO gradient collective (workers diverge!).
+            # The timing breakdown (trainer/benchmarks) times this twin to
+            # split a measured step into compute_s vs exchange_s.
+            red = tree
+        elif strategy == "hierarchical" and pod_axis:
             fast = tuple(a for a in all_axes if a != pod_axis)
             red = C.hierarchical_psum_tree(tree, fast, pod_axis)
         elif strategy == "ring":
@@ -287,11 +336,22 @@ def make_train_step_dp(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh,
             new_err = jax.tree_util.tree_map(lambda e: e[None], new_err)
             return red, new_err, fin
 
+    overlap_reduce = None
+    if tcfg.overlap_exchange and tcfg.grad_compression == "none":
+        non_pod = tuple(a for a in all_axes if a != pod_axis)
+
+        def overlap_reduce(grad_sum, inv):
+            return C.overlapped_reduce_tree(
+                grad_sum, strategy=strategy, data_axes=non_pod,
+                pod_axis=pod_axis, bucket_bytes=tcfg.bucket_bytes,
+                world=world, pre_scale=inv)
+
     def step(state, batch):
         return train_step_fn(state, batch, cfg=cfg, tcfg=tcfg, policy=policy,
                              grad_reduce=reduce_fn,
                              metric_reduce=metric_reduce,
-                             grad_exchange=grad_exchange)
+                             grad_exchange=grad_exchange,
+                             overlap_reduce=overlap_reduce)
 
     b_struct = api.train_batch_struct(cfg, shape)
     batch_spec = P(all_axes if len(all_axes) > 1 else all_axes[0])

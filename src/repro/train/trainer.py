@@ -103,13 +103,22 @@ def train_loop(step_fn: Callable, state, batches: Iterator, *,
                watchdog_factor: float = 10.0,
                faults: Optional[FaultInjector] = None,
                config_fingerprint: Optional[str] = None,
-               seed: Optional[int] = None):
+               seed: Optional[int] = None,
+               timing_calib: Optional[dict] = None):
     """Returns (final_state, history list of metric dicts).
 
     ``batches`` may be a plain iterator; if it also implements
     ``state_dict``/``load_state_dict`` its cursor is checkpointed and
     restored for exact resume.  ``faults`` defaults to an injector built
     from the ``REPRO_FAULTS`` env var (no-op when unset).
+
+    ``timing_calib``: optional ``{"compute_s": float, "serial_step_s":
+    float}`` calibration (launch/train.py times a no-exchange twin and a
+    serial-schedule twin once at startup).  When present, every logged
+    window also reports ``compute_s`` / ``exchange_s`` (mean step time
+    split against the compute twin) and ``overlap_frac`` (the fraction of
+    the serial schedule's exchange time this run hides), so overlap wins
+    are observable per-run, not inferred from benchmarks.
     """
     faults = faults if faults is not None else FaultInjector()
     start = 0
@@ -127,6 +136,7 @@ def train_loop(step_fn: Callable, state, batches: Iterator, *,
     try:
         t0 = time.time()
         window_t0, window_steps = t0, 0
+        window_step_s, window_timed = 0.0, 0
         for step in range(start, total_steps):
             batch = next(batches)
             t_step = time.perf_counter()
@@ -152,6 +162,9 @@ def train_loop(step_fn: Callable, state, batches: Iterator, *,
                         time.sleep(retry_backoff_s * (attempt + 1))
             dt = time.perf_counter() - t_step
             window_steps += 1
+            if step - start >= 1:  # exclude the compile-bearing first step
+                window_step_s += dt
+                window_timed += 1
 
             # --- non-finite supervision (observes the AMP skip flag) ---
             if max_consecutive_skips is not None:
@@ -197,16 +210,35 @@ def train_loop(step_fn: Callable, state, batches: Iterator, *,
                 metrics["total_skips"] = total_skips
                 metrics["slow_steps"] = slow_steps
                 metrics["retries"] = retries_used
+                timing_str = ""
+                if timing_calib and window_timed:
+                    mean_dt = window_step_s / window_timed
+                    compute_s = float(timing_calib["compute_s"])
+                    exchange_s = max(0.0, mean_dt - compute_s)
+                    metrics["compute_s"] = compute_s
+                    metrics["exchange_s"] = exchange_s
+                    timing_str = (f"cmp {compute_s * 1e3:.1f}ms | "
+                                  f"xch {exchange_s * 1e3:.1f}ms | ")
+                    serial_s = timing_calib.get("serial_step_s")
+                    if serial_s is not None:
+                        serial_xch = max(0.0, float(serial_s) - compute_s)
+                        if serial_xch > 0:
+                            ovl = 1.0 - exchange_s / serial_xch
+                            metrics["overlap_frac"] = max(0.0, min(1.0, ovl))
+                            timing_str += \
+                                f"ovl {metrics['overlap_frac']:.2f} | "
                 history.append(metrics)
                 logger.info(
-                    "step %d | loss %.4f | %s%.1f steps/s",
+                    "step %d | loss %.4f | %s%s%.1f steps/s",
                     step + 1, metrics.get("loss", float("nan")),
                     (f"{metrics['tokens_per_s']:.0f} tok/s | "
                      if "tokens_per_s" in metrics else ""),
+                    timing_str,
                     metrics["steps_per_s"])
                 if metrics_hook:
                     metrics_hook(metrics)
                 window_t0, window_steps = time.time(), 0
+                window_step_s, window_timed = 0.0, 0
             faults.maybe_crash(step + 1)
             if ckpt_dir and (step + 1) % ckpt_every == 0:
                 path = save_checkpoint(ckpt_dir, step + 1, state, keep=keep,

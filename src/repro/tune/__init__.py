@@ -1,0 +1,6 @@
+"""Search-driven autotuners: measured configs, not guessed ones."""
+from repro.tune.autotune import (make_grid, run_autotune,
+                                 successive_halving, tokens_per_s)
+
+__all__ = ["make_grid", "run_autotune", "successive_halving",
+           "tokens_per_s"]
